@@ -1,0 +1,88 @@
+"""Regenerate the §Dry-run and §Roofline tables inside EXPERIMENTS.md.
+
+    PYTHONPATH=src python benchmarks/report.py
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import analyze, load_results
+
+
+def dryrun_table(results) -> str:
+    rows = [
+        "| arch | shape | mesh | status | compile s | temp GiB | collectives (static) | wire GiB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(results, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        if r.get("mode") != "rolled":
+            continue
+        if r["status"] == "ok":
+            c = r["collectives"]["counts"]
+            cstr = " ".join(f"{k.split('-')[-1][:4]}:{v}" for k, v in c.items() if v)
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {r['compile_s']} "
+                f"| {r['memory']['temp_bytes']/2**30:.1f} | {cstr or '—'} "
+                f"| {r['collectives'].get('wire_bytes',0)/2**30:.2f} |"
+            )
+        else:
+            reason = (r.get("skip_reason") or r.get("error", ""))[:70]
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} | — | — | — | {reason} |"
+            )
+    return "\n".join(rows)
+
+
+def roofline_table(results) -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | dominant | useful | roofline frac | source |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(results, key=lambda x: (x["arch"], x["shape"])):
+        if r["mesh"] != "16x16" or r.get("mode") != "rolled":
+            continue
+        a = analyze(r)
+        if a is None:
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — "
+                f"| {(r.get('skip_reason') or '')[:50]} |"
+            )
+            continue
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute_s']:.2e} | {a['t_memory_s']:.2e} "
+            f"| {a['t_collective_s']:.2e} | **{a['dominant']}** | {a['useful_ratio']:.2f} "
+            f"| {a['roofline_fraction']:.2f} | {a['source']} |"
+        )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    results = load_results("dryrun_results.json")
+    with open("EXPERIMENTS.md") as f:
+        doc = f.read()
+    doc = re.sub(
+        r"<!-- DRYRUN_TABLE -->.*?(?=\n## §Roofline)",
+        "<!-- DRYRUN_TABLE -->\n" + dryrun_table(results) + "\n",
+        doc,
+        flags=re.S,
+    )
+    doc = re.sub(
+        r"<!-- ROOFLINE_TABLE -->.*?(?=\n---\n\n## §Perf)",
+        "<!-- ROOFLINE_TABLE -->\n" + roofline_table(results) + "\n",
+        doc,
+        flags=re.S,
+    )
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    n_ok = sum(r["status"] == "ok" and r.get("mode") == "rolled" for r in results)
+    n_skip = sum(r["status"] == "skipped" and r.get("mode") == "rolled" for r in results)
+    print(f"EXPERIMENTS.md updated: {n_ok} ok + {n_skip} skipped rolled cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+Sections:
+  table1    occupancy before/after RegDem          (paper Table 1)
+  fig6      variant speedups over nvcc             (paper Fig. 6)
+  fig7      post-spilling optimization ablation    (paper Fig. 7)
+  fig8      candidate-strategy comparison          (paper Fig. 8)
+  fig9      predictor vs oracle vs naive           (paper Fig. 9)
+  roofline  dry-run three-term roofline per cell   (EXPERIMENTS §Roofline)
+
+Run all: ``PYTHONPATH=src python -m benchmarks.run``
+One section: ``... -m benchmarks.run --only fig6``
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="table1|fig6|fig7|fig8|fig9|roofline")
+    args = ap.parse_args()
+
+    from benchmarks import paper_figs, roofline, tpu_selector
+
+    sections = {
+        "table1": paper_figs.table1_occupancy,
+        "fig6": paper_figs.fig6_speedups,
+        "fig7": paper_figs.fig7_postopt,
+        "fig8": paper_figs.fig8_candidates,
+        "fig9": paper_figs.fig9_predictor,
+        "roofline": roofline.roofline_rows,
+        "tpu_selector": tpu_selector.selector_rows,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in sections.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        for row in fn():
+            print(row)
+        print(f"section_{name}_wall,{(time.time()-t0)*1e6:.0f},elapsed", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

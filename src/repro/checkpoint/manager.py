@@ -1,0 +1,204 @@
+"""Checkpointing: atomic, async, keep-k, reshard-on-restore.
+
+Designed for the fault-tolerance contract of the trainer:
+
+* **atomicity** — arrays are written to ``step_<n>.tmp`` and renamed only
+  after a manifest (pytree structure + shapes + dtypes + data-batch index)
+  is fully written, so a crash mid-save never corrupts the latest
+  checkpoint;
+* **async** — ``save()`` snapshots arrays to host memory synchronously
+  (cheap) and writes to disk on a worker thread, overlapping I/O with the
+  next training steps; ``wait()`` joins before the next save or exit;
+* **keep-k GC** — older checkpoints beyond ``keep`` are deleted after a
+  successful save;
+* **elastic restore** — ``restore`` takes target shardings (possibly for a
+  *different* mesh than the save-time mesh) and ``device_put``s each leaf
+  accordingly: checkpoint + new mesh = resharded job, which is the
+  elastic-rescale path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: Pytree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_tree(path: str, tree: Pytree, extra: Optional[Dict[str, Any]] = None) -> None:
+    """Synchronous atomic save of a pytree of arrays."""
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"leaves": [], "extra": extra or {}}
+    for key, leaf in _flatten_with_paths(tree):
+        arr = np.asarray(leaf)
+        dtype_str = str(arr.dtype)
+        if arr.dtype.kind not in "biufc":  # extension dtype (bfloat16, fp8…)
+            arr = arr.view(f"u{arr.dtype.itemsize}")  # raw-bits container
+        fname = key.replace(_SEP, "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"key": key, "file": fname, "shape": list(arr.shape), "dtype": dtype_str}
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def restore_tree(
+    path: str,
+    like: Pytree,
+    shardings: Optional[Pytree] = None,
+) -> Tuple[Pytree, Dict[str, Any]]:
+    """Restore into the structure of ``like``; optionally reshard leaves.
+
+    ``shardings`` may target a different mesh than the checkpoint was saved
+    under (elastic restore) — each leaf is host-loaded then placed.
+    """
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {e["key"]: e for e in manifest["leaves"]}
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_flat = (
+        jax.tree.leaves(
+            shardings,
+            is_leaf=lambda s: isinstance(s, jax.sharding.Sharding),
+        )
+        if shardings is not None
+        else [None] * len(flat)
+    )
+    leaves = []
+    for (pathk, leaf), shard in zip(flat, shard_flat):
+        key = _SEP.join(_path_str(p) for p in pathk)
+        entry = by_key.get(key)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(os.path.join(path, entry["file"]))
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != expected {np.shape(leaf)}"
+            )
+        if str(arr.dtype) != entry["dtype"]:
+            # extension dtypes (bfloat16) need ml_dtypes-aware resolution
+            import ml_dtypes
+
+            try:
+                target = np.dtype(entry["dtype"])
+            except TypeError:
+                target = np.dtype(getattr(ml_dtypes, entry["dtype"]))
+            if arr.dtype.itemsize == target.itemsize and arr.dtype.kind in "uV":
+                arr = arr.view(target)  # raw-bits container round trip
+            else:
+                arr = arr.astype(target)
+        if shard is not None:
+            leaves.append(jax.device_put(arr, shard))
+        else:
+            leaves.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save ------------------------------------------------------------------
+
+    def save(self, step: int, tree: Pytree, extra: Optional[Dict[str, Any]] = None,
+             async_: bool = True) -> None:
+        self.wait()
+        # snapshot to host memory before returning control to training
+        host = jax.tree.map(lambda x: np.asarray(x), tree)
+        extra = dict(extra or {}, step=step)
+        path = self._path(step)
+
+        def work():
+            try:
+                save_tree(path, host, extra)
+                self._gc()
+            except BaseException as e:  # pragma: no cover - surfaced in wait()
+                self._error = e
+
+        if async_:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            self._raise_if_failed()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint save failed") from err
+
+    # -- restore -----------------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+        return max(steps) if steps else None
+
+    def restore(
+        self, like: Pytree, step: Optional[int] = None, shardings: Optional[Pytree] = None
+    ) -> Tuple[Pytree, Dict[str, Any]]:
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return restore_tree(self._path(step), like, shardings)
+
+    # -- misc --------------------------------------------------------------------
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        )
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self._path(s), ignore_errors=True)

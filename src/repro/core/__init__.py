@@ -1,0 +1,46 @@
+"""Core: the paper's contribution (RegDem + predictor + pyReDe translator).
+
+Faithful-reproduction layer:
+
+* :mod:`repro.core.isa`         Maxwell-like abstract ISA + interpreter
+* :mod:`repro.core.occupancy`   CC 5.2 occupancy calculator
+* :mod:`repro.core.sched`       control-word scheduler / verifier
+* :mod:`repro.core.kernelgen`   synthetic "nvcc" + Table-1 benchmark corpus
+* :mod:`repro.core.candidates`  §3.4.3 candidate strategies
+* :mod:`repro.core.regdem`      §3 demotion algorithm (Fig. 3)
+* :mod:`repro.core.compaction`  §3.3 relocation space (Fig. 4)
+* :mod:`repro.core.postopt`     §3.4 post-spilling optimizations
+* :mod:`repro.core.variants`    §5.3 comparison variants (Table 3)
+* :mod:`repro.core.simulator`   cycle-approximate Maxwell timing model
+* :mod:`repro.core.predictor`   §4 compile-time performance predictor
+* :mod:`repro.core.translator`  pyReDe pipeline with self-checks
+
+TPU-adaptation layer (see DESIGN.md §2):
+
+* :mod:`repro.core.vmem_demotion`  VMEM-scratch residency policies
+* :mod:`repro.core.tpu_predictor`  static variant selector over XLA artifacts
+"""
+
+from .isa import Instr, Kernel, Label, equivalent, parse_kernel
+from .occupancy import MAXWELL, Occupancy, occupancy, occupancy_of, spill_targets
+from .regdem import RegDemOptions, RegDemResult, auto_targets, demote
+from .translator import TranslationReport, translate
+
+__all__ = [
+    "Instr",
+    "Kernel",
+    "Label",
+    "equivalent",
+    "parse_kernel",
+    "MAXWELL",
+    "Occupancy",
+    "occupancy",
+    "occupancy_of",
+    "spill_targets",
+    "RegDemOptions",
+    "RegDemResult",
+    "auto_targets",
+    "demote",
+    "TranslationReport",
+    "translate",
+]

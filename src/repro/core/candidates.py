@@ -1,0 +1,101 @@
+"""Candidate-register selection for demotion (paper §3.4.3).
+
+Three strategies, each estimating register access counts; candidates are
+chosen in *ascending* order of the estimate (cheapest-to-demote first):
+
+* ``static``   one pass over the assembly, counting static accesses;
+* ``cfg``      per-basic-block counts, blocks inside loops weighted x10;
+* ``conflict`` ascending number of operand conflicts (ties: static count).
+
+Excluded from candidacy: live-in/live-out (ABI) registers, RZ, and the odd
+alias words of 64-bit pairs (pairs are demoted through their leading word).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Set, Tuple
+
+from .isa import CFG, RZ, Instr, Kernel
+
+STRATEGIES = ("static", "cfg", "conflict")
+
+#: Generic loop weight (paper §3.4.3 / §4: "a generic value of 10").
+LOOP_FACTOR = 10
+
+
+def width_map(kernel: Kernel) -> Dict[int, int]:
+    """reg -> operand width (2 for 64-bit pairs), by leading register."""
+    widths: Dict[int, int] = {}
+    for ins in kernel.instructions():
+        w = ins.info.width
+        regs = list(ins.dsts)
+        # address operands stay 32-bit even for wide memory ops
+        if ins.info.is_memory:
+            regs += ins.srcs[1:]
+        else:
+            regs += ins.srcs
+        for r in regs:
+            if r != RZ:
+                widths[r] = max(widths.get(r, 1), w)
+        if ins.info.is_memory and ins.srcs:
+            r = ins.srcs[0]
+            if r != RZ:
+                widths.setdefault(r, 1)
+    return widths
+
+
+def operand_conflicts(kernel: Kernel) -> Dict[int, Set[int]]:
+    """reg -> set of registers co-occurring in the same instruction.
+
+    Two demoted registers appearing in one instruction would need two value
+    temporaries (an *operand conflict*, §3.1 challenge 2), so after demoting
+    ``r`` every conflicting candidate is dropped.
+    """
+    conf: Dict[int, Set[int]] = {}
+    for ins in kernel.instructions():
+        regs = [r for r in ins.leading_regs() if r != RZ]
+        for a in regs:
+            for b in regs:
+                if a != b:
+                    conf.setdefault(a, set()).add(b)
+    return conf
+
+
+def _excluded(kernel: Kernel) -> Set[int]:
+    widths = width_map(kernel)
+    excl: Set[int] = set(kernel.live_in) | set(kernel.live_out) | {RZ}
+    if kernel.rda is not None:
+        excl.add(kernel.rda)
+    # odd alias words of pairs are not independent candidates
+    for r, w in widths.items():
+        if w == 2:
+            excl.add(r + 1)
+    return excl
+
+
+def make_candidates(kernel: Kernel, strategy: str) -> List[Tuple[int, int]]:
+    """Ordered demotion queue: list of (leading_reg, width)."""
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; want one of {STRATEGIES}")
+    widths = width_map(kernel)
+    excl = _excluded(kernel)
+    regs = [r for r in sorted(widths) if r not in excl]
+
+    if strategy == "static":
+        counts = kernel.static_access_counts()
+        key = lambda r: (counts.get(r, 0), r)
+    elif strategy == "cfg":
+        cfg = CFG(kernel)
+        weighted: Dict[int, float] = {}
+        for blk in cfg.blocks:
+            w = LOOP_FACTOR ** blk.loop_depth
+            for ins in blk.instrs:
+                for r in ins.leading_regs():
+                    weighted[r] = weighted.get(r, 0.0) + w
+        key = lambda r: (weighted.get(r, 0.0), r)
+    else:  # conflict
+        conf = operand_conflicts(kernel)
+        counts = kernel.static_access_counts()
+        key = lambda r: (len(conf.get(r, ())), counts.get(r, 0), r)
+
+    return [(r, widths[r]) for r in sorted(regs, key=key)]

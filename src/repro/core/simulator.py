@@ -1,0 +1,217 @@
+"""Cycle-approximate multi-warp timing simulator for the abstract ISA.
+
+The paper evaluates variants with nvprof on a GTX Titan X.  Without the GPU,
+this simulator is the measurement instrument: it models the Maxwell
+microarchitecture features that RegDem's trade-off lives on:
+
+* **occupancy-driven latency hiding** — ``resident_warps`` warps round-robin
+  on an SM with an issue width of 4 (four warp schedulers); a warp blocked on
+  a scoreboard barrier or stall count lets others issue;
+* **scoreboard barriers** — write barriers signal at producer latency
+  (global 200cy / shared 24cy / FP64 48cy / SFU 20cy), read barriers at
+  operand-read time; wait masks block issue;
+* **functional-unit contention** — per-class issue intervals derived from
+  unit counts (FP32 128 lanes -> 4 warps/cycle, FP64 4 lanes -> 1 warp per
+  8 cycles, LSU/SFU 32 lanes -> 1 warp/cycle).  This is what makes ``md``
+  (FP64-bound) immune to occupancy gains, exactly as in §5.5;
+* **register bank conflicts** — serialized operand reads extend issue time;
+* **stall counts** — fixed-latency dependencies honoured as scheduled.
+
+The simulator executes the *dynamic* instruction stream (loops expanded via
+the ``trip_count`` metadata), one SM's resident warps at a time, and scales
+to the full launch by wave count.  Its absolute cycle counts are
+approximations; variant *ratios* (speedups) are the quantity of interest,
+mirroring how the paper reports Fig. 6.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .isa import Instr, Kernel, Label, NUM_BARRIERS, OpClass
+from .occupancy import MAXWELL, Occupancy, SMConfig, occupancy_of
+
+#: per-class issue interval in cycles per warp-instruction:
+#: 32 lanes-per-warp / unit lanes.
+ISSUE_INTERVAL: Dict[OpClass, float] = {
+    OpClass.FP32: 32 / 128,
+    OpClass.INT: 32 / 128,
+    OpClass.FP64: 32 / 4,
+    OpClass.SFU: 32 / 32,
+    OpClass.LSU_GLOBAL: 32 / 32,
+    OpClass.LSU_SHARED: 32 / 32,
+    OpClass.LSU_LOCAL: 32 / 32,
+    OpClass.CONTROL: 32 / 128,
+    OpClass.MISC: 32 / 32,
+}
+
+#: number of warp schedulers per SM (Maxwell: 4, single-issue modelled)
+ISSUE_WIDTH = 4
+
+#: barrier signal latency per class (producer completion).  Local-memory
+#: traffic is L1-cached on Maxwell, so its *effective* latency sits between
+#: shared memory and DRAM — the paper's whole premise is the ordering
+#: shared (24) < local (cached, ~80) < global (200).
+LOCAL_EFFECTIVE_LATENCY = 80
+
+
+def _signal_latency(ins: Instr) -> int:
+    k = ins.info.klass
+    if k is OpClass.LSU_GLOBAL:
+        return 200
+    if k is OpClass.LSU_LOCAL:
+        return LOCAL_EFFECTIVE_LATENCY
+    if k is OpClass.LSU_SHARED:
+        return 24
+    return k.latency
+
+
+def flatten_trace(kernel: Kernel, max_len: int = 200_000) -> List[Instr]:
+    """Expand the dynamic instruction stream of one warp.
+
+    Backward branches with ``trip_count`` metadata loop that many times;
+    unpredicated forward branches are taken; predicated forward branches
+    fall through (SIMT serialization of the cold path is approximated by
+    the predicated instructions already present in the stream).
+    """
+    labels = {it.name: i for i, it in enumerate(kernel.items) if isinstance(it, Label)}
+    trace: List[Instr] = []
+    counters: Dict[int, int] = {}
+    pc = 0
+    while pc < len(kernel.items):
+        it = kernel.items[pc]
+        if isinstance(it, Label):
+            pc += 1
+            continue
+        ins: Instr = it
+        trace.append(ins)
+        if len(trace) > max_len:
+            raise RuntimeError(f"{kernel.name}: dynamic trace exceeds {max_len}")
+        if ins.info.is_exit:
+            break
+        if ins.info.is_branch:
+            tgt = labels[ins.target]
+            if ins.trip_count is not None and tgt < pc:
+                n = counters.get(ins.uid, 0) + 1
+                counters[ins.uid] = n
+                if n < ins.trip_count:
+                    pc = tgt
+                else:
+                    counters[ins.uid] = 0
+                    pc += 1
+            elif ins.pred is None:
+                pc = tgt
+            else:
+                pc += 1
+            continue
+        pc += 1
+    return trace
+
+
+@dataclass
+class SimResult:
+    kernel_name: str
+    cycles_per_wave: int
+    waves: float
+    total_cycles: int
+    occupancy: Occupancy
+    dynamic_instructions: int
+    issue_stalls: int  # cycles where no warp could issue
+
+
+def simulate(
+    kernel: Kernel,
+    sm: SMConfig = MAXWELL,
+    max_cycles: int = 50_000_000,
+) -> SimResult:
+    """Simulate one wave of resident warps on one SM; scale by wave count."""
+    occ = occupancy_of(kernel, sm)
+    trace = flatten_trace(kernel)
+    n_warps = max(occ.resident_warps, 1)
+
+    # per-warp state
+    pc = [0] * n_warps
+    ready = [0.0] * n_warps  # earliest issue cycle
+    bar_signal = [[0.0] * NUM_BARRIERS for _ in range(n_warps)]
+    done = [False] * n_warps
+    n_done = 0
+
+    unit_free: Dict[OpClass, float] = {k: 0.0 for k in OpClass}
+    cycle = 0.0
+    idle_cycles = 0
+    rr = 0  # round-robin pointer
+
+    def warp_next_time(w: int) -> float:
+        """Earliest cycle warp ``w`` could issue its next instruction."""
+        t = ready[w]
+        ins = trace[pc[w]]
+        for b in ins.ctrl.wait:
+            t = max(t, bar_signal[w][b])
+        return t
+
+    while n_done < n_warps and cycle < max_cycles:
+        issued = 0
+        for k in range(n_warps):
+            if issued >= ISSUE_WIDTH:
+                break
+            w = (rr + k) % n_warps
+            if done[w]:
+                continue
+            ins = trace[pc[w]]
+            if ready[w] > cycle:
+                continue
+            if any(bar_signal[w][b] > cycle for b in ins.ctrl.wait):
+                continue
+            klass = ins.info.klass
+            # the unit blocks only once this cycle's issue capacity is spent
+            # (e.g. FP32 interval 0.25 -> four issues per cycle)
+            if unit_free[klass] >= cycle + 1:
+                continue
+            # ---- issue -----------------------------------------------------
+            issued += 1
+            unit_free[klass] = max(unit_free[klass], cycle) + ISSUE_INTERVAL[klass]
+            issue_cost = max(1, ins.ctrl.stall) + ins.reg_bank_conflicts()
+            ready[w] = cycle + issue_cost
+            if ins.ctrl.write_bar is not None:
+                bar_signal[w][ins.ctrl.write_bar] = cycle + _signal_latency(ins)
+            if ins.ctrl.read_bar is not None:
+                # operands are read shortly after issue
+                bar_signal[w][ins.ctrl.read_bar] = cycle + min(
+                    _signal_latency(ins), 20
+                )
+            pc[w] += 1
+            if pc[w] >= len(trace):
+                done[w] = True
+                n_done += 1
+        rr = (rr + 1) % n_warps
+        if issued == 0:
+            # jump to the next time anything can happen
+            nxt = min(
+                (warp_next_time(w) for w in range(n_warps) if not done[w]),
+                default=cycle + 1,
+            )
+            nxt = max(nxt, cycle + 1)
+            idle_cycles += int(nxt - cycle)
+            cycle = nxt
+        else:
+            cycle += 1
+
+    # fractional waves: charge the launch by work/throughput, not by rounding
+    # partial waves up (a 1.2-wave launch is not 2x a 1.0-wave launch)
+    blocks_per_wave = max(occ.resident_blocks, 1) * sm.num_sms
+    waves = kernel.num_blocks / blocks_per_wave
+    return SimResult(
+        kernel_name=kernel.name,
+        cycles_per_wave=int(cycle),
+        waves=max(1.0, waves),
+        total_cycles=int(cycle * max(1.0, waves)),
+        occupancy=occ,
+        dynamic_instructions=len(trace),
+        issue_stalls=idle_cycles,
+    )
+
+
+def speedup(base: SimResult, other: SimResult) -> float:
+    """Speedup of ``other`` over ``base`` (>1 means faster)."""
+    return base.total_cycles / other.total_cycles

@@ -1,0 +1,155 @@
+"""pyReDe — the binary translator driver (paper §1, §5.1).
+
+The paper's tool extracts SASS from a ``.cubin``, applies RegDem, and
+re-inserts the code with MaxAs.  Here the "binary" is the textual rendering
+of the abstract ISA; the driver exposes the same pipeline:
+
+    parse -> choose targets -> transform (RegDem) -> self-check -> re-emit
+
+The self-check runs the schedule verifier and the dataflow-equivalence
+oracle on every emitted variant — a translated binary that fails either is
+a translator bug, never a tolerated output.
+
+``translate`` is the "automatic utility" of §3: it enumerates occupancy
+cliffs, generates a RegDem variant per (target x option-combination), and
+uses the §4 performance predictor to pick what to ship.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .candidates import STRATEGIES
+from .isa import Kernel, equivalent, parse_kernel
+from .occupancy import occupancy_of
+from .predictor import predict
+from .regdem import RegDemOptions, RegDemResult, auto_targets, demote
+from .sched import verify_schedule
+
+
+class TranslationError(RuntimeError):
+    """Raised when a transformed binary fails self-checks."""
+
+
+@dataclass
+class TranslationReport:
+    kernel_name: str
+    baseline_regs: int
+    chosen: str
+    considered: List[str]
+    predictions: Dict[str, float]
+    results: Dict[str, RegDemResult] = field(default_factory=dict)
+
+    @property
+    def chosen_kernel(self) -> Kernel:
+        if self.chosen == "nvcc":
+            raise KeyError("baseline chosen; no transformed kernel")
+        return self.results[self.chosen].kernel
+
+
+def option_space(
+    strategies: Tuple[str, ...] = STRATEGIES,
+    full: bool = False,
+) -> List[RegDemOptions]:
+    """The optimization-option combinations the predictor searches.
+
+    ``full`` sweeps all 2^4 flag combinations per strategy (the paper's
+    exhaustive search); the default uses the grouped Fig.-7 dimensions
+    (bank-conflict avoidance, performance-enhancement passes on/off).
+    """
+    out: List[RegDemOptions] = []
+    if full:
+        for strat in strategies:
+            for b, e, r, s in itertools.product([False, True], repeat=4):
+                out.append(
+                    RegDemOptions(
+                        candidate_strategy=strat,
+                        bank_avoid=b,
+                        elim_redundant=e,
+                        reschedule=r,
+                        substitute=s,
+                    )
+                )
+    else:
+        for strat in strategies:
+            for bank in (False, True):
+                for enh in (False, True):
+                    out.append(
+                        RegDemOptions(
+                            candidate_strategy=strat,
+                            bank_avoid=bank,
+                            elim_redundant=enh,
+                            reschedule=enh,
+                            substitute=enh,
+                        )
+                    )
+    return out
+
+
+def self_check(original: Kernel, transformed: Kernel, label: str) -> None:
+    errs = verify_schedule(transformed)
+    if errs:
+        raise TranslationError(f"{label}: schedule violations: {errs[:3]}")
+    if not equivalent(original, transformed):
+        raise TranslationError(f"{label}: dataflow mismatch vs original")
+
+
+def translate(
+    kernel: Kernel,
+    target_regs: Optional[int] = None,
+    options: Optional[List[RegDemOptions]] = None,
+    use_predictor: bool = True,
+) -> TranslationReport:
+    """Run the full pyReDe pipeline on one kernel."""
+    targets = [target_regs] if target_regs is not None else auto_targets(kernel)
+    opts = options or option_space()
+
+    variants: Dict[str, Kernel] = {"nvcc": kernel}
+    results: Dict[str, RegDemResult] = {}
+    ranks: Dict[str, int] = {"nvcc": 0}
+    for tgt in targets:
+        for opt in opts:
+            label = f"regdem@{tgt}:{opt.label()}"
+            res = demote(kernel, tgt, opt)
+            self_check(kernel, res.kernel, label)
+            variants[label] = res.kernel
+            results[label] = res
+            ranks[label] = sum(
+                (opt.bank_avoid, opt.elim_redundant, opt.reschedule, opt.substitute)
+            )
+
+    if use_predictor and len(variants) > 1:
+        best, preds = predict(variants, option_rank=ranks)
+        predictions = {p.name: p.adjusted for p in preds}
+    else:
+        best = next(iter(results), "nvcc")
+        predictions = {}
+
+    return TranslationReport(
+        kernel_name=kernel.name,
+        baseline_regs=kernel.reg_count,
+        chosen=best,
+        considered=sorted(variants),
+        predictions=predictions,
+        results=results,
+    )
+
+
+def roundtrip(kernel: Kernel) -> Kernel:
+    """Assembler/disassembler round trip (the MaxAs insertion step)."""
+    text = kernel.render()
+    k2 = parse_kernel(
+        text,
+        threads_per_block=kernel.threads_per_block,
+        num_blocks=kernel.num_blocks,
+        shared_size=kernel.shared_size,
+        demoted_size=kernel.demoted_size,
+        live_in=set(kernel.live_in),
+        live_out=set(kernel.live_out),
+    )
+    k2.rda = kernel.rda
+    if k2.render().splitlines()[1:] != text.splitlines()[1:]:
+        raise TranslationError(f"{kernel.name}: unstable round trip")
+    return k2

@@ -1,0 +1,220 @@
+"""Code-variant generation (paper Table 3 / §5.3).
+
+Five variants of every benchmark kernel:
+
+* ``nvcc``               the baseline: efficient scheduling, high register
+                          count, no restriction;
+* ``regdem``             this paper: demotion to shared memory at the
+                          Table-1 target register count;
+* ``local``              nvcc with ``--maxrregcount``: *aggressive register
+                          allocation* — rematerialize what it can (slower
+                          instruction sequences / "zero spilling") and spill
+                          the rest to off-chip **local** memory;
+* ``local-shared``       Hayes & Zhang [11]: the ``local`` variant at a
+                          32-register target with its spill code converted to
+                          shared memory (the closest research alternative);
+* ``local-shared-relax`` the same conversion at RegDem's register target
+                          (the enhanced research alternative).
+
+The aggressive allocator mirrors nvcc's documented behaviour: it prefers
+re-materialization over spilling (avoiding local-memory latency at the cost
+of extra dynamic instructions), which is exactly the single-thread
+performance loss the paper's §5.5 discussion attributes to the alternatives.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .candidates import make_candidates, operand_conflicts
+from .compaction import compact, packed_reg_count
+from .isa import RZ, Ctrl, Instr, Kernel, Label
+from .kernelgen import Profile, generate
+from .regdem import REG_FLOOR, RegDemOptions, RegDemResult, _demote_one, demote
+from .sched import fixup_stalls, repair_war
+
+VARIANT_NAMES = ("nvcc", "regdem", "local", "local-shared", "local-shared-relax")
+
+
+@dataclass
+class Variant:
+    name: str
+    kernel: Kernel
+    #: registers spilled/demoted to memory (words)
+    spilled: int = 0
+    #: registers removed via rematerialization
+    remat: int = 0
+    #: RegDem result when applicable
+    regdem: Optional[RegDemResult] = None
+
+
+# ---------------------------------------------------------------------------
+# Aggressive register allocation (the nvcc --maxrregcount model)
+# ---------------------------------------------------------------------------
+
+
+def _const_defs(kernel: Kernel) -> Dict[int, float]:
+    """Registers defined exactly once, by a ``MOV32I`` (rematerializable)."""
+    defs: Dict[int, List[Instr]] = {}
+    for ins in kernel.instructions():
+        for r in ins.dsts:
+            defs.setdefault(r, []).append(ins)
+    out: Dict[int, float] = {}
+    for r, instrs in defs.items():
+        if len(instrs) == 1 and instrs[0].op == "MOV32I" and instrs[0].pred is None:
+            out[r] = instrs[0].imm or 0.0
+    return out
+
+
+def _remat_one(kernel: Kernel, r: int, value: float, tmp: int) -> None:
+    """Remove ``r``'s constant definition; recompute into ``tmp`` before each
+    use ("less efficient instruction sequences", paper §1)."""
+    new_items: List[object] = []
+    for it in kernel.items:
+        if isinstance(it, Label):
+            new_items.append(it)
+            continue
+        ins: Instr = it
+        if ins.op == "MOV32I" and ins.dsts == [r]:
+            continue  # drop the definition
+        if r in ins.srcs:
+            mov = Instr(
+                "MOV32I",
+                [tmp],
+                imm=value,
+                pred=ins.pred,
+                pred_neg=ins.pred_neg,
+                tag="remat",
+            )
+            new_items.append(mov)
+            ins.srcs = [tmp if s == r else s for s in ins.srcs]
+        new_items.append(ins)
+    kernel.items = new_items
+
+
+def aggressive(
+    kernel: Kernel,
+    target_regs: int,
+    spill_space: str = "local",
+    max_remat: Optional[int] = None,
+) -> Variant:
+    """Reduce register usage to ``target_regs`` the way nvcc does under
+    ``--maxrregcount``: rematerialize first, then spill.
+
+    ``spill_space='shared'`` converts the spill code to shared memory — the
+    Hayes & Zhang local->shared transformation [11].
+    """
+    k = kernel.copy()
+    n = k.threads_per_block
+    consts = _const_defs(k)
+    victims = make_candidates(k, "static")
+    conflicts = operand_conflicts(k)
+
+    # reserve the spill value register and a distinct remat temporary
+    # (one instruction may need both a reloaded spill and a recomputed
+    # constant simultaneously); shared space also needs a base register
+    base = k.reg_count
+    wide = any(w == 2 for _, w in victims)
+    if wide and base % 2:
+        base += 1
+    rsv = base
+    rtmp = rsv + (2 if wide else 1)
+    if spill_space == "shared":
+        rda = rtmp + 1
+        k.rda = rda
+        s2r = Instr("S2R", [rsv], ctrl=Ctrl(stall=1))
+        shl = Instr("SHL", [rda], [rsv], imm=2.0, ctrl=Ctrl(stall=15))
+        s2r.ctrl.write_bar = 0
+        shl.ctrl.wait.add(0)
+        k.items[:0] = [s2r, shl]
+        load_op, store_op = "LDS", "STS"
+        s_up = (k.shared_size + 3) // 4 * 4
+    else:
+        rda = RZ
+        load_op, store_op = "LDL", "STL"
+        s_up = 0
+
+    remat_done = 0
+    rematted: Set[int] = set()
+    spilled_words = 0
+    spilled_regs: List[Tuple[int, int]] = []
+    floor = max(target_regs, 0)
+
+    # pass 1: rematerialization (nvcc prefers slower sequences over spills).
+    # Two rematerialized values in one instruction would need two temps, so
+    # conflicting candidates are skipped (same rule as demotion conflicts).
+    for r, width in list(victims):
+        if packed_reg_count(k) <= floor:
+            break
+        if width != 1 or r not in consts:
+            continue
+        if max_remat is not None and remat_done >= max_remat:
+            break
+        if conflicts.get(r, set()) & rematted:
+            continue
+        _remat_one(k, r, consts[r], rtmp)
+        remat_done += 1
+        rematted.add(r)
+        victims = [(v, w) for v, w in victims if v != r]
+    repair_war(k)
+
+    # pass 2: spill the remainder
+    while victims and packed_reg_count(k) > floor:
+        r, width = victims.pop(0)
+        if spill_space == "shared":
+            offsets = [s_up + (spilled_words + j) * n * 4 for j in range(width)]
+        else:
+            offsets = [(spilled_words + j) * 4 for j in range(width)]
+        _demote_one(k, r, width, offsets, rsv, rda, load_op, store_op)
+        spilled_regs.append((r, width))
+        spilled_words += width
+        if spill_space == "shared":
+            k.demoted_size = spilled_words * n * 4
+        bad = conflicts.get(r, set())
+        victims = [(v, w) for v, w in victims if v not in bad]
+
+    compact(k)
+    fixup_stalls(k)
+    name = "local" if spill_space == "local" else "local-shared"
+    return Variant(name=name, kernel=k, spilled=spilled_words, remat=remat_done)
+
+
+# ---------------------------------------------------------------------------
+# The Table-3 variant matrix
+# ---------------------------------------------------------------------------
+
+
+def make_variants(
+    profile: Profile,
+    regdem_options: Optional[RegDemOptions] = None,
+) -> Dict[str, Variant]:
+    """Build all five §5.3 variants for one benchmark profile."""
+    base = generate(profile)
+    target = profile.regdem_target
+
+    out: Dict[str, Variant] = {}
+    out["nvcc"] = Variant(name="nvcc", kernel=base)
+
+    rd = demote(base, target, regdem_options or RegDemOptions())
+    out["regdem"] = Variant(
+        name="regdem", kernel=rd.kernel, spilled=rd.demoted_words, regdem=rd
+    )
+
+    # nvcc's remat capacity is bounded so that its local-spill count matches
+    # the Table-1 "# Registers Spilled (nvcc)" column for this benchmark
+    reduction = max(0, base.reg_count - target)
+    cap = max(0, reduction - profile.nvcc_spills)
+
+    loc = aggressive(base, target, spill_space="local", max_remat=cap)
+    loc.name = "local"
+    out["local"] = loc
+
+    ls = aggressive(base, REG_FLOOR, spill_space="shared")
+    ls.name = "local-shared"
+    out["local-shared"] = ls
+
+    lsr = aggressive(base, target, spill_space="shared", max_remat=cap)
+    lsr.name = "local-shared-relax"
+    out["local-shared-relax"] = lsr
+    return out

@@ -1,0 +1,108 @@
+"""VMEM residency policies — the program-level register-demotion analogue.
+
+RegDem's decision (paper §3): for each over-subscribed register, pick the
+spill tier (shared memory vs local memory) and accept the access overhead
+that maximizes throughput via occupancy.  The framework-level analogue
+decides, per layer family, where *cross-iteration working state* lives:
+
+* ``DEMOTE_VMEM``   fused kernel keeps the state in VMEM scratch across the
+                    inner loop (flash-attention accumulators, SSD chunk
+                    state) — the shared-memory demotion;
+* ``SPILL_HBM``     materialize intermediates to HBM between ops (what a
+                    naive lowering of the two-pass formulation does) — the
+                    local-memory spill;
+* ``RECOMPUTE``     rematerialize in backward (remat policy) — nvcc's
+                    "slower instruction sequences / zero spilling".
+
+``plan_residency`` sizes the working set against the VMEM budget exactly
+like :func:`repro.core.occupancy.spill_targets` sizes spills against shared
+memory, and returns per-site decisions the variant generator turns into
+(attention impl x remat x block shape) combinations for the TPU predictor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional
+
+from repro.models import ModelConfig
+
+
+class Residency(enum.Enum):
+    DEMOTE_VMEM = "demote_vmem"
+    SPILL_HBM = "spill_hbm"
+    RECOMPUTE = "recompute"
+
+
+VMEM_BUDGET = 64 * 1024 * 1024  # conservative per-core VMEM, bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class Site:
+    """One demotion site: a loop-carried working set in a hot kernel."""
+
+    name: str
+    #: bytes of carried state per grid step (the "registers" to demote)
+    state_bytes: int
+    #: bytes of the per-step operand working set
+    operand_bytes: int
+    #: HBM traffic incurred per step if the state is spilled instead
+    spill_bytes_per_step: int
+    steps: int
+
+
+def attention_site(cfg: ModelConfig, seq_q: int, seq_kv: int,
+                   block_q: int = 512, block_kv: int = 1024) -> Site:
+    dh = cfg.dh
+    state = (2 * block_q + block_q * dh) * 4          # m, l, acc (fp32)
+    operand = (block_q * dh + 2 * block_kv * dh) * 2  # q, k, v (bf16)
+    spill = block_q * dh * 4 + 2 * block_q * 4        # partial o + stats
+    return Site(
+        name="attention_accumulator",
+        state_bytes=state,
+        operand_bytes=operand,
+        spill_bytes_per_step=spill,
+        steps=max(1, seq_kv // block_kv),
+    )
+
+
+def ssd_site(cfg: ModelConfig, seq: int) -> Site:
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    state = h * p * n * 4
+    q = cfg.ssm_chunk
+    operand = (q * h * p + q * h + 2 * q * n) * 4
+    return Site(
+        name="ssd_chunk_state",
+        state_bytes=state,
+        operand_bytes=operand,
+        spill_bytes_per_step=state,
+        steps=max(1, seq // max(cfg.ssm_chunk, 1)),
+    )
+
+
+def plan_residency(sites: List[Site], vmem_budget: int = VMEM_BUDGET) -> Dict[str, Residency]:
+    """Greedy demotion plan: keep state in VMEM while the double-buffered
+    working set fits (eq.-1-style budget check); otherwise spill.  States
+    that are cheap to recompute relative to their spill traffic recompute."""
+    plan: Dict[str, Residency] = {}
+    used = 0
+    for site in sorted(sites, key=lambda s: -s.spill_bytes_per_step * s.steps):
+        need = site.state_bytes + 2 * site.operand_bytes  # double-buffered
+        if used + need <= vmem_budget:
+            plan[site.name] = Residency.DEMOTE_VMEM
+            used += need
+        elif site.state_bytes < site.spill_bytes_per_step // 2:
+            plan[site.name] = Residency.RECOMPUTE
+        else:
+            plan[site.name] = Residency.SPILL_HBM
+    return plan
+
+
+def spilled_hbm_traffic(site: Site, residency: Residency) -> int:
+    """Extra HBM bytes a non-demoted site pays (feeds the memory term)."""
+    if residency is Residency.DEMOTE_VMEM:
+        return 0
+    if residency is Residency.SPILL_HBM:
+        return site.spill_bytes_per_step * site.steps * 2  # write + read back
+    return site.spill_bytes_per_step  # recompute: one final write

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+* flash_attention.py — online-softmax attention with VMEM-demoted
+  accumulators (pl.pallas_call + BlockSpec; the RegDem TPU adaptation)
+* mamba2_ssd.py      — chunked SSD with VMEM-resident recurrent state
+* ops.py             — jitted model-layout wrappers
+* ref.py             — pure-jnp oracles for the allclose tests
+"""

@@ -1,0 +1,201 @@
+"""Flash attention with VMEM-demoted accumulators (the RegDem TPU kernel).
+
+Hardware adaptation of the paper's register demotion (DESIGN.md §2):
+
+* GPU RegDem keeps spilled registers in *shared memory* so occupancy stays
+  high.  On TPU the scarce fast tier is VREGs + the per-block working set;
+  the software-managed on-chip tier is **VMEM**.  This kernel keeps the
+  online-softmax running state — the (bq,) running max ``m``, the (bq,)
+  normalizer ``l`` and the (bq, dh) output accumulator — in explicit **VMEM
+  scratch** across the KV-block grid dimension, instead of writing per-block
+  partial products to HBM and re-normalizing in a second pass (the
+  "local-memory spill" analogue a naive lowering produces).
+* Block shapes are the register-count analogue: larger (bq, bkv) blocks =
+  fewer grid steps (better "single-thread" efficiency) but a larger VMEM
+  footprint (lower "occupancy").  :func:`choose_block_sizes` plays the role
+  of the paper's occupancy-cliff target chooser: it picks the largest
+  MXU-aligned blocks whose working set fits the VMEM budget.
+
+Grid: (batch x heads, q_blocks, kv_blocks) with kv innermost so the scratch
+accumulators carry across kv steps; masking supports causal, sliding-window
+(gemma3) and chunked (llama4) patterns via position arrays.
+
+Validated against :mod:`repro.kernels.ref` in interpret mode (CPU) across
+shape/dtype sweeps; compiled with real BlockSpecs on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+#: conservative per-core VMEM budget (bytes) for block-size selection
+VMEM_BUDGET = 64 * 1024 * 1024
+#: MXU tile alignment
+LANE = 128
+SUBLANE = 8
+
+
+def choose_block_sizes(
+    seq_q: int, seq_kv: int, head_dim: int, dtype_bytes: int = 2,
+    vmem_budget: int = VMEM_BUDGET,
+) -> Tuple[int, int]:
+    """Pick (bq, bkv): largest MXU-aligned blocks fitting the VMEM budget.
+
+    Working set per grid step (all f32 scratch + operand blocks):
+      q (bq, dh) + k (bkv, dh) + v (bkv, dh) + scores (bq, bkv)
+      + acc (bq, dh) + m/l (bq) + out (bq, dh)
+    Doubled for pipelining (double-buffered HBM->VMEM copies).
+    """
+    def fits(bq: int, bkv: int) -> bool:
+        operand = (bq * head_dim + 2 * bkv * head_dim) * dtype_bytes
+        scratch = (bq * bkv + 2 * bq * head_dim + 2 * bq) * 4
+        return 2 * operand + scratch <= vmem_budget
+
+    candidates = [2048, 1024, 512, 256, 128]
+    for bq in candidates:
+        if bq > max(seq_q, LANE):
+            continue
+        for bkv in candidates:
+            if bkv > max(seq_kv, LANE):
+                continue
+            if fits(bq, bkv):
+                return min(bq, seq_q) if seq_q >= LANE else seq_q, (
+                    min(bkv, seq_kv) if seq_kv >= LANE else seq_kv
+                )
+    return min(128, seq_q), min(128, seq_kv)
+
+
+def _attention_kernel(
+    # refs (blocked by BlockSpec)
+    q_ref,      # (1, bq, dh)
+    k_ref,      # (1, bkv, dh)
+    v_ref,      # (1, bkv, dh)
+    qpos_ref,   # (1, bq)
+    kpos_ref,   # (1, bkv)
+    o_ref,      # (1, bq, dh)
+    # VMEM scratch: the demoted accumulators
+    m_scr,      # (bq,)
+    l_scr,      # (bq,)
+    acc_scr,    # (bq, dh)
+    *,
+    kv_blocks: int,
+    scale: float,
+    window: Optional[int],
+    chunk: Optional[int],
+):
+    kv_idx = pl.program_id(2)
+
+    # ---- init demoted accumulators at the first kv block -------------------
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)          # (bkv, dh)
+    v = v_ref[0].astype(jnp.float32)
+    qp = qpos_ref[0]                            # (bq,)
+    kp = kpos_ref[0]                            # (bkv,)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                   # (bq, bkv)
+
+    ok = jnp.logical_and(kp[None, :] >= 0, kp[None, :] <= qp[:, None])
+    if window is not None:
+        ok = jnp.logical_and(ok, kp[None, :] > qp[:, None] - window)
+    if chunk is not None:
+        ok = jnp.logical_and(ok, (kp[None, :] // chunk) == (qp[:, None] // chunk))
+    s = jnp.where(ok, s, NEG_INF)
+
+    # ---- online softmax over the demoted state ------------------------------
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * corr + jnp.sum(p, axis=1)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_new = acc_scr[...] * corr[:, None] + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    # ---- final normalization at the last kv block ---------------------------
+    @pl.when(kv_idx == kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bh(
+    q: jax.Array,        # (BH, Sq, Dh) — batch*heads flattened
+    k: jax.Array,        # (BH, Skv, Dh)
+    v: jax.Array,        # (BH, Skv, Dh)
+    q_positions: jax.Array,   # (BH, Sq) int32
+    kv_positions: jax.Array,  # (BH, Skv) int32
+    *,
+    window: Optional[int] = None,
+    chunk: Optional[int] = None,
+    block_q: Optional[int] = None,
+    block_kv: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Core pallas_call on (batch*heads)-flattened operands."""
+    bh, sq, dh = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    bq = block_q or choose_block_sizes(sq, skv, dh)[0]
+    bkv = block_kv or choose_block_sizes(sq, skv, dh)[1]
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    assert sq % bq == 0 and skv % bkv == 0, (sq, bq, skv, bkv)
+    q_blocks, kv_blocks = sq // bq, skv // bkv
+
+    kernel = functools.partial(
+        _attention_kernel,
+        kv_blocks=kv_blocks,
+        scale=scale,
+        window=window,
+        chunk=chunk,
+    )
+    grid = (bh, q_blocks, kv_blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bkv), lambda b, i, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pl.MemorySpace.ANY if False else _vmem((bq,), jnp.float32),
+            _vmem((bq,), jnp.float32),
+            _vmem((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, q_positions, kv_positions)
+
+
+def _vmem(shape, dtype):
+    """VMEM scratch allocation (TPU); plain scratch under interpret mode."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, dtype)
+    except (ImportError, AttributeError):  # pragma: no cover
+        return pl.MemorySpace.ANY(shape, dtype)  # type: ignore[attr-defined]

@@ -1,0 +1,145 @@
+"""Mamba2 SSD chunk-scan Pallas kernel with VMEM-resident recurrent state.
+
+The RegDem adaptation for the SSM family (DESIGN.md §2): the inter-chunk
+recurrent state ``h (heads_blk, P, N)`` is the demoted register — it lives
+in **VMEM scratch** across the chunk-grid dimension instead of being written
+back to HBM between chunks (which is what the pure-JAX ``lax.scan``
+formulation materializes as carry traffic).
+
+Grid: (batch, head_blocks, chunks) with chunks innermost.  Per step the
+kernel computes the intra-chunk quadratic dual form and folds the carried
+state, all in fp32 VMEM:
+
+    L        = exp(segsum(dt*a))          (Q, Q) lower-triangular decay
+    y_intra  = (C B^T . L . dt) x
+    y_inter  = C h_prev . decay_from_start
+    h       <- h * exp(sum dt*a) + B^T (dt * decay_to_end * x)
+
+Block shapes: Q (chunk length) x P (head dim) x N (state) are already
+MXU-friendly for the assigned configs (Q=256, P=64, N=64/128); the head
+dimension is blocked to keep the working set within the VMEM budget.
+
+Validated against :func:`repro.kernels.ref.ssd_reference` in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .flash_attention import _vmem
+
+
+def _ssd_kernel(
+    x_ref,    # (1, 1, Q, hb, P)
+    dt_ref,   # (1, 1, Q, hb)
+    a_ref,    # (1, hb)
+    b_ref,    # (1, 1, Q, N)
+    c_ref,    # (1, 1, Q, N)
+    y_ref,    # (1, 1, Q, hb, P)
+    hlast_ref,  # (1, hb, P, N)
+    h_scr,    # VMEM (hb, P, N) — the demoted recurrent state
+    *,
+    n_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)    # (Q, hb, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (Q, hb)
+    a = a_ref[0].astype(jnp.float32)       # (hb,)
+    b = b_ref[0, 0].astype(jnp.float32)    # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)    # (Q, N)
+
+    da = dt * a[None, :]                   # (Q, hb)
+    da_cum = jnp.cumsum(da, axis=0)        # (Q, hb)
+    da_total = da_cum[-1]                  # (hb,)
+
+    # ---- intra-chunk quadratic dual form ------------------------------------
+    # L[h, i, j] = exp(da_cum[i,h] - da_cum[j,h]) for i >= j
+    diff = da_cum[:, None, :] - da_cum[None, :, :]       # (Q, Q, hb)
+    q_idx = jax.lax.broadcasted_iota(jnp.int32, diff.shape[:2], 0)
+    k_idx = jax.lax.broadcasted_iota(jnp.int32, diff.shape[:2], 1)
+    tri = (q_idx >= k_idx)[:, :, None]
+    Lm = jnp.where(tri, jnp.exp(diff), 0.0)              # (Q, Q, hb)
+    scores = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                     # (Q, Q)
+    w = scores[:, :, None] * Lm * dt[None, :, :]          # (Q, Q, hb)
+    y_intra = jnp.einsum("qkh,khp->qhp", w, x)
+
+    # ---- inter-chunk from the VMEM-resident state ----------------------------
+    h_prev = h_scr[...]                                   # (hb, P, N)
+    decay_from_start = jnp.exp(da_cum)                    # (Q, hb)
+    y_inter = jnp.einsum("qn,qh,hpn->qhp", c, decay_from_start, h_prev)
+
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # ---- state update ---------------------------------------------------------
+    decay_to_end = jnp.exp(da_total[None, :] - da_cum)    # (Q, hb)
+    new_state = jnp.einsum("qn,qh,qhp->hpn", b, dt * decay_to_end, x)
+    h_scr[...] = h_prev * jnp.exp(da_total)[:, None, None] + new_state
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit():
+        hlast_ref[0] = h_scr[...].astype(hlast_ref.dtype)
+
+
+def ssd_pallas(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H) post-softplus
+    a: jax.Array,    # (H,) negative
+    bm: jax.Array,   # (B, S, N)
+    cm: jax.Array,   # (B, S, N)
+    *,
+    chunk: int = 256,
+    head_block: Optional[int] = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), h_last (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    hb = head_block or min(H, max(1, (8 * 1024 * 1024) // (P * N * 4)))
+    while H % hb:
+        hb -= 1
+    hblocks = H // hb
+
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H)
+    bc = bm.reshape(B, nc, chunk, N)
+    cc = cm.reshape(B, nc, chunk, N)
+    a2 = jnp.broadcast_to(a[None, :], (B, H))
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc)
+    grid = (B, hblocks, nc)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hb, P), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, chunk, hb), lambda b, h, c: (b, c, 0, h)),
+            pl.BlockSpec((1, hb), lambda b, h, c: (b, h)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hb, P), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, hb, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, chunk, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((hb, P, N), jnp.float32)],
+        interpret=interpret,
+    )(xc, dtc, a2, bc, cc)
+    return y.reshape(B, S, H, P), h_last

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels (the ``ref.py`` contract).
+
+Small, obviously-correct implementations used by the per-kernel allclose
+tests; no chunking, no scratch, no tiling tricks.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(
+    q: jax.Array,        # (BH, Sq, Dh)
+    k: jax.Array,        # (BH, Skv, Dh)
+    v: jax.Array,        # (BH, Skv, Dh)
+    q_positions: jax.Array,   # (BH, Sq)
+    kv_positions: jax.Array,  # (BH, Skv)
+    window: Optional[int] = None,
+    chunk: Optional[int] = None,
+) -> jax.Array:
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    qp = q_positions[:, :, None]
+    kp = kv_positions[:, None, :]
+    ok = jnp.logical_and(kp >= 0, kp <= qp)
+    if window is not None:
+        ok = jnp.logical_and(ok, kp > qp - window)
+    if chunk is not None:
+        ok = jnp.logical_and(ok, (kp // chunk) == (qp // chunk))
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_reference(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H)
+    a: jax.Array,    # (H,)
+    bm: jax.Array,   # (B, S, N)
+    cm: jax.Array,   # (B, S, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential state-space recurrence (the SSD ground truth)."""
+    B, S, H, P = x.shape
+    N = bm.shape[-1]
+
+    def step(h, t):
+        xt, dtt, bt, ct = t
+        da = jnp.exp(dtt.astype(jnp.float32) * a[None, :])       # (B, H)
+        dbx = jnp.einsum("bh,bn,bhp->bhpn", dtt.astype(jnp.float32),
+                         bt.astype(jnp.float32), xt.astype(jnp.float32))
+        h = h * da[:, :, None, None] + dbx
+        y = jnp.einsum("bn,bhpn->bhp", ct.astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2),
+        bm.transpose(1, 0, 2),
+        cm.transpose(1, 0, 2),
+    )
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h_last

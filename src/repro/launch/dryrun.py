@@ -1,0 +1,371 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds the real step function (train_step /
+prefill_step / serve_step), lowers it with explicit in_shardings on the
+production mesh, compiles it, and extracts:
+
+* ``memory_analysis()``  — per-device argument/temp/output bytes (the
+  "proves it fits" check against the 16 GB v5e HBM);
+* ``cost_analysis()``    — per-device HLO FLOPs and bytes accessed;
+* collective bytes       — parsed from the optimized (SPMD-partitioned)
+  HLO text: operand sizes of all-reduce / all-gather / reduce-scatter /
+  all-to-all / collective-permute ops;
+
+and appends the record to a JSON results file consumed by the roofline
+benchmark (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage::
+
+    python -m repro.launch.dryrun --arch qwen2_7b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out dryrun.json
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, ShapeCell, get_config, shape_cells
+from repro.launch import specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.sharding import check_divisibility, default_rules, logical_to_sharding
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_TYPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Per-device collective traffic from the SPMD-partitioned module.
+
+    Optimized HLO does not annotate operand types inline, so sizes come from
+    the *result* shape on each collective line, converted to operand bytes
+    (all-gather result = operand x group; reduce-scatter operand = result x
+    group) and to estimated *wire* bytes per device for the roofline term
+    (ring algorithms: all-reduce ~ 2x(g-1)/g x size, (all-)gather/scatter ~
+    (g-1)/g x full size).
+    """
+    per_op: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    counts: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        for coll in _COLLECTIVES:
+            if f" {coll}(" not in line:
+                continue
+            lhs = line.split(f" {coll}(")[0]
+            shapes = _TYPE_RE.findall(lhs)
+            if not shapes:
+                continue
+            result = sum(_shape_bytes(d, s) for d, s in shapes)
+            gm = _GROUPS_RE.search(line)
+            g = len(gm.group(1).split(",")) if gm else 1
+            g = max(g, 1)
+            counts[coll] += 1
+            if coll == "all-gather":
+                operand = result // g
+                wire += result * (g - 1) / g
+            elif coll == "reduce-scatter":
+                operand = result * g
+                wire += operand * (g - 1) / g
+            elif coll == "all-reduce":
+                operand = result
+                wire += 2 * result * (g - 1) / g
+            elif coll == "collective-permute":
+                operand = result
+                wire += result
+            else:  # all-to-all
+                operand = result
+                wire += result * (g - 1) / g
+            per_op[coll] += operand
+            break  # one collective per line in optimized HLO
+    return {
+        "bytes_by_type": per_op,
+        "counts": counts,
+        "total_bytes": sum(per_op.values()),
+        "wire_bytes": int(wire),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def build_cell(
+    arch: str,
+    cell: ShapeCell,
+    mesh: Mesh,
+    *,
+    remat: str = "full",
+    fsdp: bool = True,
+    attn_impl: str = "chunked",
+    microbatches: int = 1,
+    extra_rules=None,
+) -> Tuple[Any, Tuple, Tuple]:
+    """Returns (step_fn, abstract_args, in_shardings)."""
+    cfg = get_config(arch)
+    model = Model(cfg, attn_impl=attn_impl, remat=remat)
+    rules = extra_rules or default_rules(
+        mesh, n_experts=(cfg.moe.n_experts if cfg.moe else 0), fsdp=fsdp and cell.kind == "train"
+    )
+    params_struct, axes = model.abstract_init()
+    p_shard = logical_to_sharding(axes, mesh, rules, like=params_struct)
+    g = specs.cell_geometry(cfg, cell)
+
+    if cell.kind == "train":
+        opt_struct = jax.eval_shape(adamw_init, params_struct)
+        opt_shard = {
+            "mu": p_shard,
+            "nu": p_shard,
+            "count": NamedSharding(mesh, P()),
+        }
+        ocfg = AdamWConfig()
+
+        dp = specs.data_axes(mesh)
+
+        def train_step(params, opt_state, batch):
+            if microbatches > 1:
+                def micro(acc, mb):
+                    loss, grads = jax.value_and_grad(model.train_loss)(params, mb)
+                    return jax.tree.map(jnp.add, acc, grads), loss
+
+                def split_mb(x):
+                    y = x.reshape(
+                        (microbatches, x.shape[0] // microbatches) + x.shape[1:]
+                    )
+                    # keep the batch shard on dim 1: without the constraint
+                    # GSPMD falls back to "involuntary full rematerialization"
+                    # (replicating the whole batch) on the reshape
+                    spec = P(*([None, dp] + [None] * (y.ndim - 2)))
+                    return jax.lax.with_sharding_constraint(y, NamedSharding(mesh, spec))
+
+                from repro.models.common import scan as common_scan
+
+                split = jax.tree.map(split_mb, batch)
+                zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                gsum, losses = common_scan(micro, zero, split)
+                grads = jax.tree.map(lambda g: g / microbatches, gsum)
+                loss = losses.mean()
+            else:
+                loss, grads = jax.value_and_grad(model.train_loss)(params, batch)
+            new_p, new_o, metrics = adamw_update(ocfg, params, grads, opt_state)
+            metrics["loss"] = loss
+            return new_p, new_o, metrics
+
+        batch = specs.train_inputs(cfg, cell)
+        b_shard = specs.batch_shardings(mesh, batch, g["batch"])
+        return train_step, (params_struct, opt_struct, batch), (p_shard, opt_shard, b_shard)
+
+    if cell.kind == "prefill":
+        def prefill_step(params, batch):
+            h, state = model.prefill(params, batch, max_len=g["seq"])
+            logits = model.logits(params, h[:, -1:])
+            return jnp.argmax(logits, axis=-1), state
+
+        batch = specs.prefill_inputs(cfg, cell)
+        b_shard = specs.batch_shardings(mesh, batch, g["batch"])
+        return prefill_step, (params_struct, batch), (p_shard, b_shard)
+
+    # decode
+    def serve_step(params, tokens, state):
+        h, new_state = model.decode_step(params, tokens, state)
+        logits = model.logits(params, h[:, -1:])
+        return jnp.argmax(logits, axis=-1), new_state
+
+    tok_struct, state_struct = specs.decode_inputs(cfg, cell)
+    tok_shard = specs.batch_shardings(mesh, tok_struct, g["batch"])
+    st_shard = specs.state_shardings(cfg, mesh, state_struct, g["batch"])
+    return (
+        serve_step,
+        (params_struct, tok_struct["tokens"], state_struct),
+        (p_shard, tok_shard["tokens"], st_shard),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The dry run
+# ---------------------------------------------------------------------------
+
+
+def run_cell(
+    arch: str,
+    cell: ShapeCell,
+    mesh: Mesh,
+    mesh_name: str,
+    *,
+    remat: str = "full",
+    fsdp: bool = True,
+    attn_impl: str = "chunked",
+    microbatches: int = 1,
+    keep_text: bool = False,
+    mode: str = "rolled",
+) -> Dict[str, Any]:
+    record: Dict[str, Any] = {
+        "arch": arch,
+        "shape": cell.name,
+        "mesh": mesh_name,
+        "kind": cell.kind,
+        "seq_len": cell.seq_len,
+        "global_batch": cell.global_batch,
+        "remat": remat,
+        "fsdp": fsdp,
+        "microbatches": microbatches,
+        "mode": mode,
+    }
+    if cell.skipped:
+        record["status"] = "skipped"
+        record["skip_reason"] = cell.skip_reason
+        return record
+    cfg = get_config(arch)
+    problems = check_divisibility(cfg, mesh, cell.global_batch)
+    try:
+        import contextlib
+
+        from repro.models.common import unrolled_scans
+
+        step_fn, args, in_shardings = build_cell(
+            arch, cell, mesh,
+            remat=remat, fsdp=fsdp, attn_impl=attn_impl, microbatches=microbatches,
+        )
+        t0 = time.time()
+        # "unrolled" mode expands every scan so cost_analysis counts loop
+        # bodies the correct number of times and the static collective parse
+        # is exact — used for roofline calibration cells.  "rolled" (default)
+        # keeps while loops: fast compiles, realistic memory analysis; its
+        # flops/collectives count loop bodies once (see benchmarks.roofline
+        # for the analytic-model correction).
+        ctx = unrolled_scans() if mode == "unrolled" else contextlib.nullcontext()
+        with ctx:
+            lowered = jax.jit(step_fn, in_shardings=in_shardings).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        text = compiled.as_text()
+        colls = collective_bytes(text)
+        record.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            flops=float(ca.get("flops", 0.0)),
+            bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+            memory={
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+            },
+            collectives=colls,
+            divisibility=problems,
+        )
+        if keep_text:
+            record["hlo_text"] = text
+    except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape cell (default: all)")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--remat", default="full", choices=["none", "dots", "full"])
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--attn", default="chunked", choices=["chunked", "xla"])
+    ap.add_argument("--mode", default="rolled", choices=["rolled", "unrolled"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {
+        (r["arch"], r["shape"], r["mesh"], r.get("remat"), r.get("microbatches"), r.get("mode"))
+        for r in results
+    }
+
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "2x16x16" if multi else "16x16"
+        for arch in archs:
+            for cell in shape_cells(arch):
+                if args.shape and cell.name != args.shape:
+                    continue
+                key = (arch, cell.name, mesh_name, args.remat, args.microbatches, args.mode)
+                if key in done:
+                    continue
+                print(f"[dryrun] {arch} x {cell.name} on {mesh_name} ({args.mode}) ...", flush=True)
+                rec = run_cell(
+                    arch, cell, mesh, mesh_name,
+                    remat=args.remat, fsdp=not args.no_fsdp,
+                    attn_impl=args.attn, microbatches=args.microbatches,
+                    mode=args.mode,
+                )
+                status = rec["status"]
+                extra = (
+                    f"flops={rec.get('flops', 0):.3e} "
+                    f"temp={rec.get('memory', {}).get('temp_bytes', 0)/2**30:.2f}GiB "
+                    f"coll={rec.get('collectives', {}).get('total_bytes', 0)/2**30:.3f}GiB"
+                    if status == "ok"
+                    else rec.get("skip_reason") or rec.get("error", "")[:200]
+                )
+                print(f"[dryrun]   -> {status}: {extra}", flush=True)
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,248 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block.
+
+arXiv:2411.15242: a stack of Mamba2 layers, interleaved every ``attn_period``
+layers with a full attention block whose weights are SHARED across all
+applications (parameter-efficient global mixing).  Each application still
+needs its own KV cache (activations differ), so caches are stacked over
+applications, not layers.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention
+from .common import scan as common_scan, apply_rope, dense_init, rms_norm, swiglu, trunc_normal
+from .mamba2 import init_mamba_layer, mamba_layer
+from .transformer import ModelConfig
+
+Pytree = Any
+
+
+def n_attn_applications(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_period if cfg.attn_period else 0
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Tuple[Pytree, Pytree]:
+    ks = jax.random.split(key, 8)
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    dt = cfg.dtype
+
+    # stacked mamba layers
+    def init_one(k):
+        p, _ = init_mamba_layer(
+            k, D, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, dtype=dt
+        )
+        return p
+
+    _, m_axes = init_mamba_layer(
+        ks[0], D, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, dtype=dt
+    )
+    mamba = jax.vmap(init_one)(jax.random.split(ks[1], L))
+    mamba_axes = {k: ("layers",) + v for k, v in m_axes.items()}
+
+    # one shared attention block (+ its FFN)
+    Hq, Hkv, Dh, F = cfg.n_heads, cfg.n_kv_heads, cfg.dh, cfg.d_ff
+    shared = {
+        "ln1": jnp.zeros((D,), dt),
+        "wq": dense_init(ks[2], D, Hq * Dh, dt),
+        "wk": dense_init(ks[3], D, Hkv * Dh, dt),
+        "wv": dense_init(ks[4], D, Hkv * Dh, dt),
+        "wo": dense_init(ks[5], Hq * Dh, D, dt),
+        "ln2": jnp.zeros((D,), dt),
+        "w_gate": dense_init(ks[6], D, F, dt),
+        "w_up": dense_init(ks[7], D, F, dt),
+        "w_down": dense_init(ks[2], F, D, dt),
+    }
+    shared_axes = {
+        "ln1": ("embed",),
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "heads"),
+        "wv": ("embed", "heads"),
+        "wo": ("heads", "embed"),
+        "ln2": ("embed",),
+        "w_gate": ("embed", "ff"),
+        "w_up": ("embed", "ff"),
+        "w_down": ("ff", "embed"),
+    }
+
+    params = {
+        "embed": trunc_normal(ks[3], (V, D), std=0.02, dtype=dt),
+        "mamba": mamba,
+        "shared_attn": shared,
+        "final_ln": jnp.zeros((D,), dt),
+    }
+    axes = {
+        "embed": ("vocab", "embed_tbl"),
+        "mamba": mamba_axes,
+        "shared_attn": shared_axes,
+        "final_ln": ("embed",),
+    }
+    return params, axes
+
+
+def _shared_attn_block(
+    cfg: ModelConfig,
+    sp: Dict[str, jax.Array],
+    h: jax.Array,
+    positions: jax.Array,
+    attn_impl: str,
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cache_positions: Optional[jax.Array] = None,
+):
+    B, S, D = h.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    x = rms_norm(h, sp["ln1"])
+    q = (x @ sp["wq"]).reshape(B, S, Hq, Dh)
+    k = (x @ sp["wk"]).reshape(B, S, Hkv, Dh)
+    v = (x @ sp["wv"]).reshape(B, S, Hkv, Dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        upd = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0)))
+        ck = upd(ck, k.astype(ck.dtype), positions[:, 0])
+        cv = upd(cv, v.astype(cv.dtype), positions[:, 0])
+        k_att, v_att, kv_pos = ck, cv, cache_positions
+        new_cache = (ck, cv)
+    else:
+        k_att, v_att, kv_pos = k, v, positions
+        new_cache = None
+    o = attention(q, k_att, v_att, positions, kv_pos, impl=attn_impl)
+    h = h + (o.reshape(B, S, -1) @ sp["wo"]).astype(h.dtype)
+    x = rms_norm(h, sp["ln2"])
+    h = h + (swiglu(x @ sp["w_gate"], x @ sp["w_up"]) @ sp["w_down"]).astype(h.dtype)
+    return h, new_cache
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Pytree,
+    tokens: jax.Array,
+    positions: Optional[jax.Array] = None,
+    attn_impl: str = "chunked",
+    remat: str = "none",
+    kv_caches: Optional[Tuple[jax.Array, jax.Array]] = None,  # (Apps,B,Skv,Hkv,Dh) x2
+    cache_positions: Optional[jax.Array] = None,
+    ssm_states: Optional[jax.Array] = None,   # (L, B, H, P, N)
+    conv_states: Optional[jax.Array] = None,  # (L, B, D_CONV-1, conv_dim)
+    decode: bool = False,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    B, S = tokens.shape
+    h = params["embed"][tokens].astype(cfg.dtype)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    period = cfg.attn_period or (cfg.n_layers + 1)
+    apps = n_attn_applications(cfg)
+
+    def group_body(carry, xs):
+        """One group = `period` mamba layers + one shared-attn application."""
+        h, app_idx = carry
+        lp_group, kv_k, kv_v, ssm_g, conv_g = xs
+
+        def mamba_scan(carry_h, layer_xs):
+            hh = carry_h
+            lp, ssm_i, conv_i = layer_xs
+            hh, new_ssm, new_conv = mamba_layer(
+                lp, hh, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                chunk=cfg.ssm_chunk,
+                ssm_state=ssm_i if decode else None,
+                conv_state=conv_i if decode else None,
+                decode=decode,
+            )
+            if new_conv is None:
+                new_conv = conv_i
+            return hh, (new_ssm, new_conv)
+
+        h, (new_ssm_g, new_conv_g) = common_scan(
+            mamba_scan, h, (lp_group, ssm_g, conv_g)
+        )
+        h, new_kv = _shared_attn_block(
+            cfg, params["shared_attn"], h, positions, attn_impl,
+            kv_cache=(kv_k, kv_v) if kv_caches is not None else None,
+            cache_positions=cache_positions,
+        )
+        if new_kv is None:
+            new_kv = (kv_k, kv_v)
+        return (h, app_idx + 1), (new_kv[0], new_kv[1], new_ssm_g, new_conv_g)
+
+    # reshape stacked layer params into (apps, period, ...)
+    L = cfg.n_layers
+    used = apps * period
+    lp_used = jax.tree.map(lambda w: w[:used].reshape((apps, period) + w.shape[1:]), params["mamba"])
+
+    if ssm_states is None:
+        from .mamba2 import D_CONV, mamba_dims
+
+        d_inner, conv_dim = mamba_dims(cfg.d_model, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state)
+        ssm_states = jnp.zeros(
+            (L, B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        )
+        conv_states = jnp.zeros((L, B, D_CONV - 1, conv_dim), jnp.bfloat16)
+    ssm_g = ssm_states[:used].reshape((apps, period) + ssm_states.shape[1:])
+    conv_g = conv_states[:used].reshape((apps, period) + conv_states.shape[1:])
+    if kv_caches is not None:
+        kv_k, kv_v = kv_caches
+    else:
+        Hkv, Dh = cfg.n_kv_heads, cfg.dh
+        kv_k = jnp.zeros((apps, B, 1, Hkv, Dh), cfg.dtype)
+        kv_v = jnp.zeros((apps, B, 1, Hkv, Dh), cfg.dtype)
+
+    body = group_body
+    if remat in ("dots", "full"):
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    (h, _), (nk, nv, nssm, nconv) = common_scan(
+        body, (h, 0), (lp_used, kv_k, kv_v, ssm_g, conv_g)
+    )
+
+    # trailing mamba layers (n_layers not divisible by period)
+    rest = L - used
+    if rest:
+        lp_rest = jax.tree.map(lambda w: w[used:], params["mamba"])
+
+        def tail_scan(carry_h, layer_xs):
+            hh = carry_h
+            lp, ssm_i, conv_i = layer_xs
+            hh, new_ssm, new_conv = mamba_layer(
+                lp, hh, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                chunk=cfg.ssm_chunk,
+                ssm_state=ssm_i if decode else None,
+                conv_state=conv_i if decode else None,
+                decode=decode,
+            )
+            if new_conv is None:
+                new_conv = conv_i
+            return hh, (new_ssm, new_conv)
+
+        h, (tssm, tconv) = common_scan(
+            tail_scan, h, (lp_rest, ssm_states[used:], conv_states[used:])
+        )
+    h = rms_norm(h, params["final_ln"])
+
+    state = {
+        "kv": (nk, nv),
+        "ssm": jnp.concatenate(
+            [nssm.reshape((used,) + nssm.shape[2:])] + ([tssm] if rest else []), axis=0
+        ),
+        "conv": jnp.concatenate(
+            [nconv.reshape((used,) + nconv.shape[2:])] + ([tconv] if rest else []), axis=0
+        ),
+    }
+    return h, state
+
+
+def lm_head_loss(cfg, params, h, targets, chunk: int = 512):
+    from .transformer import lm_loss
+
+    # tied embeddings (zamba2 ties); reuse the chunked CE with embed.T
+    tied_cfg = cfg
+    fake = {"embed": params["embed"]}
+    import dataclasses as _dc
+
+    tied = _dc.replace(cfg, tie_embeddings=True)
+    return lm_loss(tied, fake, h, targets, chunk=chunk)

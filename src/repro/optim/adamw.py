@@ -1,0 +1,101 @@
+"""AdamW + schedules, distribution-friendly.
+
+The optimizer state mirrors the parameter pytree (same logical axes), so
+GSPMD shards moments exactly like parameters — with FSDP rules this is
+ZeRO-style optimizer-state sharding for free.  Master weights and moments
+are fp32; parameters may be bf16 (mixed precision).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def adamw_init(params: Pytree) -> Dict[str, Pytree]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params: Pytree,
+    grads: Pytree,
+    state: Dict[str, Pytree],
+) -> Tuple[Pytree, Dict[str, Pytree], Dict[str, jax.Array]]:
+    count = state["count"] + 1
+    lr = cosine_schedule(cfg, count)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mu_hat = mu / (1 - cfg.b1 ** count.astype(jnp.float32))
+        nu_hat = nu / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (step + cfg.weight_decay * p32)
+        return p_new.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        a, b, c = upd(p, g, mu, nu)
+        new_p.append(a)
+        new_mu.append(b)
+        new_nu.append(c)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {
+            "mu": jax.tree.unflatten(treedef, new_mu),
+            "nu": jax.tree.unflatten(treedef, new_nu),
+            "count": count,
+        },
+        metrics,
+    )

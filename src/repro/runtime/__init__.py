@@ -1,0 +1,4 @@
+from .trainer import Trainer, TrainConfig
+from .serving import Server, ServeConfig
+
+__all__ = ["Trainer", "TrainConfig", "Server", "ServeConfig"]

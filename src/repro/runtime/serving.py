@@ -1,0 +1,185 @@
+"""Batched serving runtime: prefill + decode with continuous batching.
+
+A small but real serving loop:
+
+* fixed-size decode batch with **slot recycling** (continuous batching):
+  when a sequence finishes (EOS or max tokens), its slot is refilled from
+  the request queue with a fresh prefill — prefill writes into the shared
+  KV cache at that slot;
+* greedy or temperature sampling;
+* the decode step is a single jitted function over the cache pytree — this
+  is the ``serve_step`` the decode/long-context dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model, ModelConfig
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_slots: int = 8
+    max_len: int = 512
+    max_new_tokens: int = 32
+    eos: int = 0
+    temperature: float = 0.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (prompt_len,) int32
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: List[int]
+    latency_s: float
+
+
+class Server:
+    """Single-host reference server; the same step functions lower on the
+    production mesh (see launch/dryrun.py serve cells)."""
+
+    def __init__(self, model_cfg: ModelConfig, cfg: ServeConfig, params: Pytree):
+        self.model = Model(model_cfg, attn_impl="chunked")
+        self.cfg = cfg
+        self.params = params
+        self._decode = jax.jit(self._decode_step)
+        self._prefill = jax.jit(self._prefill_fn)
+
+    # -- jitted steps -----------------------------------------------------------
+
+    def _prefill_fn(self, params, tokens):
+        h, state = self.model.prefill(params, {"tokens": tokens}, self.cfg.max_len)
+        logits = self.model.logits(params, h[:, -1:])
+        return logits[:, 0], state
+
+    def _decode_step(self, params, tokens, state):
+        h, new_state = self.model.decode_step(params, tokens, state)
+        logits = self.model.logits(params, h[:, -1:])
+        return logits[:, 0], new_state
+
+    def _sample(self, logits: jax.Array, rng: np.random.Generator) -> np.ndarray:
+        if self.cfg.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        probs = np.asarray(jax.nn.softmax(logits / self.cfg.temperature, axis=-1))
+        return np.array(
+            [rng.choice(probs.shape[-1], p=probs[i]) for i in range(probs.shape[0])]
+        )
+
+    # -- the serving loop ----------------------------------------------------------
+
+    def serve(self, requests: List[Request]) -> List[Completion]:
+        cfg = self.cfg
+        rng = np.random.default_rng(cfg.seed)
+        pending = queue.SimpleQueue()
+        for r in requests:
+            pending.put(r)
+
+        # state per slot
+        slot_req: List[Optional[Request]] = [None] * cfg.batch_slots
+        slot_tokens: List[List[int]] = [[] for _ in range(cfg.batch_slots)]
+        slot_start: List[float] = [0.0] * cfg.batch_slots
+        done: List[Completion] = []
+
+        state = None
+        next_tokens = np.zeros((cfg.batch_slots,), np.int32)
+
+        def fill_slot(slot: int):
+            nonlocal state, next_tokens
+            if pending.empty():
+                slot_req[slot] = None
+                return
+            req = pending.get()
+            slot_req[slot] = req
+            slot_tokens[slot] = []
+            slot_start[slot] = time.perf_counter()
+            prompt = req.prompt[None, :]  # (1, L)
+            logits, st = self._prefill(self.params, jnp.asarray(prompt))
+            tok = int(self._sample(logits, rng)[0])
+            if state is None:
+                # first fill: broadcast single-slot state into the batch
+                state = self._tree_map_batch(
+                    lambda x, ax: jnp.repeat(x, cfg.batch_slots, axis=ax), st
+                )
+            else:
+                state = self._tree_map_batch2(
+                    lambda full, one, ax: self._set_slot(full, one, slot, ax), state, st
+                )
+            slot_tokens[slot].append(tok)
+            next_tokens[slot] = tok
+
+        for slot in range(cfg.batch_slots):
+            fill_slot(slot)
+
+        while any(r is not None for r in slot_req):
+            logits, state = self._decode(
+                self.params, jnp.asarray(next_tokens)[:, None], state
+            )
+            sampled = self._sample(logits, rng)
+            for slot, req in enumerate(slot_req):
+                if req is None:
+                    continue
+                tok = int(sampled[slot])
+                slot_tokens[slot].append(tok)
+                next_tokens[slot] = tok
+                if tok == cfg.eos or len(slot_tokens[slot]) >= cfg.max_new_tokens:
+                    done.append(
+                        Completion(
+                            uid=req.uid,
+                            tokens=list(slot_tokens[slot]),
+                            latency_s=time.perf_counter() - slot_start[slot],
+                        )
+                    )
+                    fill_slot(slot)
+        return sorted(done, key=lambda c: c.uid)
+
+    # -- slot surgery -------------------------------------------------------------
+    # State leaves keyed by their top-level name:
+    #   kv:   (L|apps, B, S, H, Dh) -> batch axis 1
+    #   ssm:  (L, B, H, P, N)       -> batch axis 1
+    #   conv: (L, B, K, C)          -> batch axis 1
+    #   pos:  (B,)                  -> batch axis 0
+    #   enc:  (B, T, D)             -> batch axis 0
+    _BATCH_AXIS = {"kv": 1, "ssm": 1, "conv": 1, "pos": 0, "enc": 0}
+
+    @classmethod
+    def _leaf_axis(cls, path) -> int:
+        key = None
+        for p in path:
+            if hasattr(p, "key"):
+                key = str(p.key)
+                break
+        return cls._BATCH_AXIS.get(key, 0)
+
+    @classmethod
+    def _tree_map_batch(cls, fn, tree):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, x: fn(x, cls._leaf_axis(path)), tree
+        )
+
+    @classmethod
+    def _tree_map_batch2(cls, fn, tree_a, tree_b):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, a, b: fn(a, b, cls._leaf_axis(path)), tree_a, tree_b
+        )
+
+    @staticmethod
+    def _set_slot(full: jax.Array, one: jax.Array, slot: int, ax: int) -> jax.Array:
+        idx = [slice(None)] * full.ndim
+        idx[ax] = slice(slot, slot + 1)
+        return full.at[tuple(idx)].set(one)

@@ -1,0 +1,104 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.compaction import compact, packed_reg_count
+from repro.core.isa import NUM_SMEM_BANKS, equivalent, smem_bank
+from repro.core.kernelgen import generate, random_profile
+from repro.core.occupancy import MAXWELL, occupancy
+from repro.core.regdem import RegDemOptions, auto_targets, demote
+from repro.core.sched import verify_schedule
+
+_slow = settings(
+    max_examples=15,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+@_slow
+def test_generated_kernels_schedule_clean(seed):
+    k = generate(random_profile(seed))
+    assert verify_schedule(k) == []
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+@_slow
+def test_demotion_invariants(seed):
+    """For any kernel and any occupancy-cliff target:
+    semantics preserved, schedule clean, register count reduced,
+    shared-memory accounting exact."""
+    k = generate(random_profile(seed))
+    targets = auto_targets(k)
+    if not targets:
+        return
+    res = demote(k, targets[0])
+    assert equivalent(k, res.kernel)
+    assert verify_schedule(res.kernel) == []
+    assert res.kernel.reg_count <= k.reg_count
+    assert res.kernel.demoted_size == res.demoted_words * k.threads_per_block * 4
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    strategy=st.sampled_from(["static", "cfg", "conflict"]),
+    flags=st.tuples(st.booleans(), st.booleans(), st.booleans(), st.booleans()),
+)
+@settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+def test_demotion_options_never_break(seed, strategy, flags):
+    k = generate(random_profile(seed % 30))
+    targets = auto_targets(k)
+    if not targets:
+        return
+    b, e, r, s = flags
+    opt = RegDemOptions(
+        candidate_strategy=strategy,
+        bank_avoid=b,
+        elim_redundant=e,
+        reschedule=r,
+        substitute=s,
+    )
+    res = demote(k, targets[-1], opt)
+    assert equivalent(k, res.kernel)
+    assert verify_schedule(res.kernel) == []
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+@_slow
+def test_compaction_idempotent_and_tight(seed):
+    k = generate(random_profile(seed))
+    kk = k.copy()
+    compact(kk)
+    once = kk.reg_count
+    compact(kk)
+    assert kk.reg_count == once  # idempotent
+    assert equivalent(k, kk)
+
+
+@given(
+    n_threads=st.sampled_from([32, 64, 128, 192, 256, 512, 1024]),
+    static=st.integers(min_value=0, max_value=4096),
+    r=st.integers(min_value=0, max_value=24),
+)
+@settings(max_examples=60, deadline=None)
+def test_eq1_layout_bank_conflict_free(n_threads, static, r):
+    """Paper eq. 1: for any (threads/block, static smem, demoted index), a
+    warp's 32 lanes always touch 32 distinct banks."""
+    s_up = (static + 3) // 4 * 4
+    banks = [smem_bank(t * 4 + s_up + r * n_threads * 4) for t in range(32)]
+    assert len(set(banks)) == NUM_SMEM_BANKS
+
+
+@given(
+    regs=st.integers(min_value=1, max_value=255),
+    thr=st.sampled_from([32, 64, 128, 256, 512, 1024]),
+    smem=st.integers(min_value=0, max_value=MAXWELL.smem_per_block),
+)
+@settings(max_examples=100, deadline=None)
+def test_occupancy_bounds(regs, thr, smem):
+    occ = occupancy(regs, thr, smem)
+    assert 0.0 <= occ.occupancy <= 1.0
+    assert occ.resident_threads <= MAXWELL.max_threads
+    assert occ.resident_warps <= MAXWELL.max_warps
+    assert occ.resident_blocks <= MAXWELL.max_blocks

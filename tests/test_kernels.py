@@ -1,0 +1,160 @@
+"""Per-kernel correctness: interpret-mode Pallas vs pure-jnp oracles.
+
+Sweeps shapes and dtypes per the deliverable contract; every cell asserts
+allclose against :mod:`repro.kernels.ref`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import choose_block_sizes
+
+
+def _mk_attention(B, Sq, Skv, Hq, Hkv, Dh, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, Dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, Dh), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, Dh), jnp.float32).astype(dtype)
+    qpos = jnp.broadcast_to(
+        jnp.arange(Skv - Sq, Skv, dtype=jnp.int32)[None], (B, Sq)
+    )
+    kpos = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32)[None], (B, Skv))
+    return q, k, v, qpos, kpos
+
+
+def _ref_model_layout(q, k, v, qpos, kpos, **kw):
+    B, Sq, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, Dh)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, 1).reshape(B * Hq, -1, Dh)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, 1).reshape(B * Hq, -1, Dh)
+    qp = jnp.repeat(qpos[:, None, :], Hq, 1).reshape(B * Hq, Sq)
+    kp = jnp.repeat(kpos[:, None, :], Hq, 1).reshape(B * Hq, -1)
+    r = ref.attention_reference(qf, kf, vf, qp, kp, **kw)
+    return r.reshape(B, Hq, Sq, Dh).transpose(0, 2, 1, 3)
+
+
+ATTN_SHAPES = [
+    # (B, Sq, Skv, Hq, Hkv, Dh)
+    (1, 128, 128, 2, 2, 64),     # MHA square
+    (2, 128, 128, 4, 1, 64),     # extreme GQA (gemma3-style kv=1)
+    (2, 64, 256, 4, 2, 128),     # decode-ish: short q, long kv
+    (1, 256, 256, 8, 4, 128),    # GQA 2:1
+    (2, 128, 128, 4, 4, 256),    # wide heads (gemma3 head_dim)
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(shape, dtype):
+    B, Sq, Skv, Hq, Hkv, Dh = shape
+    q, k, v, qpos, kpos = _mk_attention(B, Sq, Skv, Hq, Hkv, Dh, dtype)
+    out = ops.flash_attention(q, k, v, qpos, kpos, block_q=64, block_kv=64)
+    want = _ref_model_layout(q, k, v, qpos, kpos)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), want.astype(jnp.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_attention_sliding_window(window):
+    q, k, v, qpos, kpos = _mk_attention(2, 128, 128, 4, 2, 64, jnp.float32)
+    out = ops.flash_attention(q, k, v, qpos, kpos, window=window, block_q=64, block_kv=64)
+    want = _ref_model_layout(q, k, v, qpos, kpos, window=window)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("chunk", [32, 64])
+def test_flash_attention_chunked_mask(chunk):
+    q, k, v, qpos, kpos = _mk_attention(2, 128, 128, 4, 2, 64, jnp.float32)
+    out = ops.flash_attention(q, k, v, qpos, kpos, chunk_attn=chunk, block_q=64, block_kv=64)
+    want = _ref_model_layout(q, k, v, qpos, kpos, chunk=chunk)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("bq,bkv", [(32, 32), (64, 128), (128, 64)])
+def test_flash_attention_block_shapes(bq, bkv):
+    """Block shape must not change the math (the demotion-knob invariant)."""
+    q, k, v, qpos, kpos = _mk_attention(1, 128, 128, 2, 2, 64, jnp.float32)
+    base = ops.flash_attention(q, k, v, qpos, kpos, block_q=128, block_kv=128)
+    out = ops.flash_attention(q, k, v, qpos, kpos, block_q=bq, block_kv=bkv)
+    np.testing.assert_allclose(out, base, atol=2e-5, rtol=2e-5)
+
+
+def test_choose_block_sizes_alignment_and_budget():
+    bq, bkv = choose_block_sizes(4096, 4096, 128)
+    assert bq % 128 == 0 and bkv % 128 == 0
+    # working set must respect the budget it was given
+    small_bq, small_bkv = choose_block_sizes(4096, 4096, 128, vmem_budget=2 * 2**20)
+    assert small_bq * small_bkv <= bq * bkv
+    # short sequences never exceed their length
+    bq, bkv = choose_block_sizes(64, 64, 64)
+    assert bq <= 64 and bkv <= 64
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD kernel
+# ---------------------------------------------------------------------------
+
+SSD_SHAPES = [
+    # (B, S, H, P, N, chunk)
+    (1, 64, 2, 16, 16, 16),
+    (2, 128, 4, 32, 32, 32),
+    (1, 96, 8, 16, 64, 32),     # mamba2-style wide state
+    (2, 64, 4, 64, 16, 16),     # zamba2-style wide heads
+]
+
+
+def _mk_ssd(B, S, H, P, N, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = (jax.random.normal(ks[0], (B, S, H, P)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(dtype)
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    bm = (jax.random.normal(ks[3], (B, S, N)) * 0.4).astype(dtype)
+    cm = (jax.random.normal(ks[4], (B, S, N)) * 0.4).astype(dtype)
+    return x, dt, a, bm, cm
+
+
+@pytest.mark.parametrize("shape", SSD_SHAPES)
+def test_ssd_kernel_shapes(shape):
+    B, S, H, P, N, chunk = shape
+    x, dt, a, bm, cm = _mk_ssd(B, S, H, P, N)
+    y, h = ops.mamba2_ssd(x, dt, a, bm, cm, chunk=chunk)
+    yr, hr = ref.ssd_reference(x, dt, a, bm, cm)
+    np.testing.assert_allclose(y, yr, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(h, hr, atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_kernel_bf16():
+    x, dt, a, bm, cm = _mk_ssd(1, 64, 4, 16, 32, dtype=jnp.bfloat16)
+    y, h = ops.mamba2_ssd(x, dt, a, bm, cm, chunk=16)
+    yr, hr = ref.ssd_reference(x, dt, a, bm, cm)
+    np.testing.assert_allclose(
+        y.astype(jnp.float32), yr.astype(jnp.float32), atol=5e-2, rtol=5e-2
+    )
+
+
+def test_ssd_head_blocking_invariant():
+    """Head-block size must not change results (VMEM footprint knob)."""
+    x, dt, a, bm, cm = _mk_ssd(1, 64, 8, 16, 16)
+    base, hb = ops.mamba2_ssd(x, dt, a, bm, cm, chunk=16, head_block=8)
+    for blk in (1, 2, 4):
+        y, h = ops.mamba2_ssd(x, dt, a, bm, cm, chunk=16, head_block=blk)
+        np.testing.assert_allclose(y, base, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(h, hb, atol=1e-5, rtol=1e-5)
+
+
+def test_ssd_matches_model_scan_path():
+    """The kernel agrees with the model's lax.scan SSD (chunked dual form)."""
+    from repro.models.mamba2 import ssd_chunked
+
+    x, dt, a, bm, cm = _mk_ssd(2, 64, 4, 16, 32)
+    y_kernel, h_kernel = ops.mamba2_ssd(x, dt, a, bm, cm, chunk=16)
+    y_model, h_model = ssd_chunked(x, dt, a, bm[:, :, None, :], cm[:, :, None, :], chunk=16)
+    np.testing.assert_allclose(y_kernel, y_model, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(h_kernel, h_model, atol=1e-4, rtol=1e-4)
