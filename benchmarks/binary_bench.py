@@ -1,0 +1,89 @@
+"""Binary-substrate benchmarks: codec throughput and container sizes.
+
+Measures, over the Table-1 corpus, what the pseudo-cubin layer costs:
+``dumps`` (assemble) and ``loads`` (disassemble) wall time per instruction,
+and the container footprint per kernel.  Rows follow the harness CSV
+contract (``name,us_per_call,derived``); the same numbers are also written
+to ``BENCH_binary.json`` so the performance trajectory accumulates
+machine-readably across PRs.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, Iterator, Optional
+
+from repro.binary import dumps, loads
+from repro.core.kernelgen import all_paper_kernels
+
+#: Default location of the machine-readable report (cwd-relative, i.e. the
+#: repo root under the documented ``python -m benchmarks.run`` invocation).
+JSON_PATH = "BENCH_binary.json"
+
+_MIN_REPS = 5
+_MIN_NS = 20_000_000  # calibrate reps so each timing loop runs >= 20 ms
+
+
+def _time_ns(fn, arg) -> float:
+    """Median-of-3 wall time of ``fn(arg)`` in ns, rep-calibrated."""
+    reps = _MIN_REPS
+    while True:
+        t0 = time.perf_counter_ns()
+        for _ in range(reps):
+            fn(arg)
+        elapsed = time.perf_counter_ns() - t0
+        if elapsed >= _MIN_NS:
+            break
+        reps *= 4
+    samples = []
+    for _ in range(3):
+        t0 = time.perf_counter_ns()
+        for _ in range(reps):
+            fn(arg)
+        samples.append((time.perf_counter_ns() - t0) / reps)
+    samples.sort()
+    return samples[1]
+
+
+def binary_rows(json_path: Optional[str] = JSON_PATH) -> Iterator[str]:
+    """Yield CSV rows; write ``BENCH_binary.json`` as a side effect."""
+    report: Dict[str, Dict] = {}
+    tot_instrs = tot_bytes = 0
+    enc_ns = dec_ns = 0.0
+    for name, kernel in all_paper_kernels().items():
+        blob = dumps(kernel)
+        n = len(kernel.instructions())
+        encode_ns = _time_ns(dumps, kernel)
+        decode_ns = _time_ns(loads, blob)
+        report[name] = {
+            "instrs": n,
+            "container_bytes": len(blob),
+            "bytes_per_instr": round(len(blob) / n, 2),
+            "encode_ns_per_instr": round(encode_ns / n, 1),
+            "decode_ns_per_instr": round(decode_ns / n, 1),
+        }
+        tot_instrs += n
+        tot_bytes += len(blob)
+        enc_ns += encode_ns
+        dec_ns += decode_ns
+        yield f"binary_encode_{name},{encode_ns / 1e3:.2f},ns_per_instr={encode_ns / n:.0f}"
+        yield f"binary_decode_{name},{decode_ns / 1e3:.2f},ns_per_instr={decode_ns / n:.0f}"
+        yield f"binary_size_{name},0.00,bytes={len(blob)}"
+
+    summary = {
+        "total_instrs": tot_instrs,
+        "total_container_bytes": tot_bytes,
+        "encode_ns_per_instr": round(enc_ns / tot_instrs, 1),
+        "decode_ns_per_instr": round(dec_ns / tot_instrs, 1),
+        "bytes_per_instr": round(tot_bytes / tot_instrs, 2),
+    }
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump({"kernels": report, "summary": summary}, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    yield (
+        f"binary_corpus,0.00,encode_ns={summary['encode_ns_per_instr']};"
+        f"decode_ns={summary['decode_ns_per_instr']};"
+        f"bytes_per_instr={summary['bytes_per_instr']}"
+    )

@@ -8,6 +8,7 @@ Sections:
   fig8      candidate-strategy comparison          (paper Fig. 8)
   fig9      predictor vs oracle vs naive           (paper Fig. 9)
   roofline  dry-run three-term roofline per cell   (EXPERIMENTS §Roofline)
+  binary    pseudo-cubin codec throughput + sizes  (writes BENCH_binary.json)
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One section: ``... -m benchmarks.run --only fig6``
@@ -21,10 +22,16 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="table1|fig6|fig7|fig8|fig9|roofline")
+                    help="table1|fig6|fig7|fig8|fig9|roofline|binary")
+    ap.add_argument("--binary-json", default=None, metavar="PATH",
+                    help="where the binary section writes its JSON report "
+                         "(default: BENCH_binary.json in the cwd)")
     args = ap.parse_args()
 
-    from benchmarks import paper_figs, roofline, tpu_selector
+    from benchmarks import binary_bench, paper_figs, roofline, tpu_selector
+
+    def binary_rows():
+        return binary_bench.binary_rows(args.binary_json or binary_bench.JSON_PATH)
 
     sections = {
         "table1": paper_figs.table1_occupancy,
@@ -34,6 +41,7 @@ def main() -> None:
         "fig9": paper_figs.fig9_predictor,
         "roofline": roofline.roofline_rows,
         "tpu_selector": tpu_selector.selector_rows,
+        "binary": binary_rows,
     }
     print("name,us_per_call,derived")
     for name, fn in sections.items():

@@ -6,11 +6,17 @@ selection — then verifies the translated binary on the ISA interpreter and
 grades it on the timing simulator.
 
     PYTHONPATH=src python examples/translate_kernel.py --kernel cfd
+
+The pipeline is binary->binary: the kernel is serialized to pseudo-cubin
+container bytes, translated bytes-in/bytes-out, and disassembled again.
+``--overlay`` prints the chosen variant as SASSOverlay-style annotated
+disassembly (stall / yield / barrier columns).
 """
 
 import argparse
 
-from repro.core import occupancy_of, translate
+from repro.binary import dumps, loads, overlay
+from repro.core import occupancy_of, translate_binary
 from repro.core.isa import equivalent
 from repro.core.kernelgen import PAPER_BENCHMARKS, paper_kernel
 from repro.core.regdem import auto_targets
@@ -20,6 +26,8 @@ from repro.core.simulator import simulate, speedup
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--kernel", default="cfd", choices=sorted(PAPER_BENCHMARKS))
+    ap.add_argument("--overlay", action="store_true",
+                    help="print annotated disassembly of the chosen variant")
     args = ap.parse_args()
 
     k = paper_kernel(args.kernel)
@@ -28,10 +36,13 @@ def main() -> None:
           f"occupancy {occ.occupancy:.3f} (limited by {occ.limiter})")
     print(f"occupancy-cliff spill targets: {auto_targets(k)}")
 
-    report = translate(k)
+    # the shipping path: container bytes in, container bytes out
+    blob = dumps(k)
+    out, report = translate_binary(blob)
+    chosen = loads(out)
     print(f"considered {len(report.considered)} variants; predictor chose: {report.chosen}")
+    print(f"binary->binary: {len(blob)}B container in, {len(out)}B container out")
     if report.chosen != "nvcc":
-        chosen = report.chosen_kernel
         occ2 = occupancy_of(chosen)
         print(f"  regs {k.reg_count} -> {chosen.reg_count}, "
               f"occupancy {occ.occupancy:.3f} -> {occ2.occupancy:.3f}, "
@@ -39,6 +50,8 @@ def main() -> None:
         assert equivalent(k, chosen), "translation must preserve semantics"
         s = speedup(simulate(k), simulate(chosen))
         print(f"  simulated speedup over baseline: {s:.3f}x")
+    if args.overlay:
+        print(overlay(chosen))
     print("OK")
 
 

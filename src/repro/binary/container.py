@@ -1,0 +1,297 @@
+"""Pseudo-cubin container: serialize kernels as self-describing binaries.
+
+A real ``.cubin`` is an ELF: header, section table, ``.strtab``, one
+``.text.<kernel>`` section per kernel plus ``.nv.info`` metadata (register
+count, shared-memory size, parameters).  This container mirrors that shape
+at the smallest size that still exercises every pyReDe pipeline step:
+
+========================  ==================================================
+region                    contents
+========================  ==================================================
+header (32 B)             magic, version, section count/offset, kernel
+                          count, opcode-table checksum, content checksum
+``.kinfo``                one fixed 168-byte record per kernel: name, launch
+                          geometry, shared/demoted bytes, declared register
+                          count, RDA register, live-in/out bitmasks, tag
+                          table
+``.text.<kernel>``        bundled control words + instruction records
+                          (:mod:`repro.binary.encoding`)
+``.labels.<kernel>``      label table: (strtab name, instruction index)
+``.strtab``               null-terminated strings (kernel/label/tag names)
+section table (16 B/row)  (name, kind, offset, size) per section, ELF-style
+                          with a null section at index 0
+========================  ==================================================
+
+``dumps``/``loads`` are strict: every structural invariant (magic, version,
+opcode-table checksum, section bounds, declared vs. recomputed register
+count) is checked on load, so a corrupted or stale container fails loudly
+instead of producing a subtly wrong kernel.
+"""
+
+from __future__ import annotations
+
+import struct
+import zlib
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+from repro.core.isa import OPCODES, Kernel
+
+from . import encoding
+
+MAGIC = b"RDEMCBN\x01"
+VERSION = 1
+
+#: Section kinds (the ``kind`` column of the section table).
+SEC_NULL, SEC_STRTAB, SEC_KINFO, SEC_TEXT, SEC_LABELS = range(5)
+
+_HDR = struct.Struct("<8sHHIHHIII")  # magic, version, n_sections, shoff,
+#                                      strtab index, n_kernels, opcode crc,
+#                                      file size, content crc
+_HDR_PAD = 32 - _HDR.size
+_SEC = struct.Struct("<IIII")  # name_off, kind, offset, size
+_LBL = struct.Struct("<II")  # name_off, instr_idx
+_KINFO = struct.Struct("<IIIHHIIIIIHH16I32s32s")
+KINFO_SIZE = _KINFO.size
+_NONE16 = 0xFFFF
+_MAX_TAGS = 16
+
+
+class ContainerError(ValueError):
+    """Raised on malformed, corrupted, or incompatible container bytes."""
+
+
+def opcode_checksum() -> int:
+    """CRC of the ISA opcode table — guards against decoding a container
+    produced under a different opcode numbering."""
+    return zlib.crc32(",".join(OPCODES).encode()) & 0xFFFFFFFF
+
+
+def _regmask(regs: Iterable[int]) -> bytes:
+    mask = 0
+    for r in regs:
+        if not 0 <= r <= 255:
+            raise ContainerError(f"register R{r} out of bitmask range")
+        mask |= 1 << r
+    return mask.to_bytes(32, "little")
+
+
+def _unmask(mask: bytes) -> set:
+    value = int.from_bytes(mask, "little")
+    return {r for r in range(256) if value & (1 << r)}
+
+
+class _StrTab:
+    """Deduplicating null-terminated string table (offset 0 = empty)."""
+
+    def __init__(self) -> None:
+        self.blob = bytearray(b"\x00")
+        self.offsets: Dict[str, int] = {"": 0}
+
+    def add(self, s: str) -> int:
+        if s not in self.offsets:
+            self.offsets[s] = len(self.blob)
+            self.blob += s.encode("utf-8") + b"\x00"
+        return self.offsets[s]
+
+    @staticmethod
+    def read(blob: bytes, off: int) -> str:
+        if off >= len(blob):
+            raise ContainerError(f"string offset {off} past strtab end")
+        end = blob.find(b"\x00", off)
+        if end == -1:
+            raise ContainerError(f"unterminated string at strtab offset {off}")
+        return blob[off:end].decode("utf-8")
+
+
+def dumps(kernels: Union[Kernel, Iterable[Kernel]]) -> bytes:
+    """Serialize one kernel (or an iterable of kernels) to container bytes."""
+    klist = [kernels] if isinstance(kernels, Kernel) else list(kernels)
+    if not klist:
+        raise ContainerError("cannot serialize an empty kernel list")
+
+    strtab = _StrTab()
+    # section rows accumulate as (name, kind, payload); offsets assigned below
+    sections: List[Tuple[str, int, bytes]] = [("", SEC_NULL, b"")]
+    kinfo_records: List[bytes] = []
+
+    for kernel in klist:
+        tags = encoding.collect_tags(kernel.items)
+        text, labels = encoding.encode_text(kernel.items, tags)
+        text_sec = len(sections) + 1  # +1: .kinfo is inserted at index 1
+        sections.append((f".text.{kernel.name}", SEC_TEXT, text))
+        lbl_blob = b"".join(
+            _LBL.pack(strtab.add(name), pos) for name, pos in labels
+        )
+        sections.append((f".labels.{kernel.name}", SEC_LABELS, lbl_blob))
+
+        tag_offs = [strtab.add(t) for t in tags] + [0] * (_MAX_TAGS - len(tags))
+        kinfo_records.append(
+            _KINFO.pack(
+                strtab.add(kernel.name),
+                len(kernel.instructions()),
+                len(labels),
+                text_sec,
+                text_sec + 1,
+                kernel.threads_per_block,
+                kernel.num_blocks,
+                kernel.shared_size,
+                kernel.demoted_size,
+                kernel.reg_count,
+                _NONE16 if kernel.rda is None else kernel.rda,
+                len(tags),
+                *tag_offs,
+                _regmask(kernel.live_in),
+                _regmask(kernel.live_out),
+            )
+        )
+
+    sections.insert(1, (".kinfo", SEC_KINFO, b"".join(kinfo_records)))
+    sections.append((".strtab", SEC_STRTAB, b""))  # payload patched below
+    strtab_index = len(sections) - 1
+
+    # resolve section names through the strtab *before* freezing its payload
+    name_offs = [strtab.add(name) for name, _, _ in sections]
+    sections[strtab_index] = (".strtab", SEC_STRTAB, bytes(strtab.blob))
+
+    offset = 32  # header
+    rows: List[bytes] = []
+    payload = bytearray()
+    for (name, kind, data), name_off in zip(sections, name_offs):
+        rows.append(_SEC.pack(name_off, kind, offset if data else 0, len(data)))
+        payload += data
+        offset += len(data)
+    shoff = offset
+    total = shoff + len(rows) * _SEC.size
+
+    body = bytes(payload) + b"".join(rows)
+    header = _HDR.pack(
+        MAGIC,
+        VERSION,
+        len(sections),
+        shoff,
+        strtab_index,
+        len(klist),
+        opcode_checksum(),
+        total,
+        zlib.crc32(body) & 0xFFFFFFFF,
+    ) + b"\x00" * _HDR_PAD
+    return header + body
+
+
+def _parse_sections(data: bytes) -> Tuple[List[Tuple[str, int, bytes]], int]:
+    """Validate the envelope and return ``[(name, kind, payload)]`` plus the
+    kernel count."""
+    if len(data) < 32:
+        raise ContainerError("container truncated before header")
+    (magic, version, n_sections, shoff, strtab_index, n_kernels, opc_crc, total,
+     content_crc) = _HDR.unpack(data[: _HDR.size])
+    if magic != MAGIC:
+        raise ContainerError(f"bad magic {magic!r}")
+    if version != VERSION:
+        raise ContainerError(f"unsupported container version {version}")
+    if opc_crc != opcode_checksum():
+        raise ContainerError(
+            "opcode-table checksum mismatch: container was produced under a "
+            "different ISA opcode numbering"
+        )
+    if total != len(data):
+        raise ContainerError(f"container size mismatch: header says {total}, got {len(data)}")
+    if zlib.crc32(data[32:]) & 0xFFFFFFFF != content_crc:
+        raise ContainerError("content checksum mismatch: container is corrupted")
+    if shoff + n_sections * _SEC.size > len(data):
+        raise ContainerError("section table out of bounds")
+    raw_rows = [
+        _SEC.unpack_from(data, shoff + i * _SEC.size) for i in range(n_sections)
+    ]
+    if not 0 <= strtab_index < n_sections or raw_rows[strtab_index][1] != SEC_STRTAB:
+        raise ContainerError("bad strtab section index")
+    for name_off, kind, offset, size in raw_rows:
+        if size and not 32 <= offset <= len(data) - size:
+            raise ContainerError("section payload out of bounds")
+    s_off, s_size = raw_rows[strtab_index][2], raw_rows[strtab_index][3]
+    strtab = data[s_off : s_off + s_size]
+    out = []
+    for name_off, kind, offset, size in raw_rows:
+        out.append((_StrTab.read(strtab, name_off), kind, data[offset : offset + size]))
+    return out, n_kernels
+
+
+def loads_many(data: bytes) -> List[Kernel]:
+    """Deserialize every kernel in the container."""
+    sections, n_kernels = _parse_sections(data)
+    strtab = next(payload for _, kind, payload in sections if kind == SEC_STRTAB)
+    kinfo = next((payload for _, kind, payload in sections if kind == SEC_KINFO), None)
+    if kinfo is None:
+        raise ContainerError("container has no .kinfo section")
+    if len(kinfo) != n_kernels * KINFO_SIZE:
+        raise ContainerError(
+            f".kinfo holds {len(kinfo)} bytes, expected {n_kernels * KINFO_SIZE}"
+        )
+
+    kernels: List[Kernel] = []
+    for i in range(n_kernels):
+        rec = _KINFO.unpack_from(kinfo, i * KINFO_SIZE)
+        (name_off, n_instrs, n_labels, text_sec, labels_sec,
+         threads, blocks, shared, demoted, reg_count, rda, n_tags) = rec[:12]
+        tag_offs = rec[12:28]
+        live_in_mask, live_out_mask = rec[28], rec[29]
+        if not 0 < n_tags <= _MAX_TAGS:
+            raise ContainerError(f"bad tag-table size {n_tags}")
+        tags = [_StrTab.read(strtab, off) for off in tag_offs[:n_tags]]
+        if not 0 <= text_sec < len(sections) or sections[text_sec][1] != SEC_TEXT:
+            raise ContainerError(f"kernel {i}: bad text section index {text_sec}")
+        if not 0 <= labels_sec < len(sections) or sections[labels_sec][1] != SEC_LABELS:
+            raise ContainerError(f"kernel {i}: bad label section index {labels_sec}")
+        lbl_blob = sections[labels_sec][2]
+        if len(lbl_blob) != n_labels * _LBL.size:
+            raise ContainerError(f"kernel {i}: label table size mismatch")
+        labels = []
+        for j in range(n_labels):
+            noff, pos = _LBL.unpack_from(lbl_blob, j * _LBL.size)
+            if pos > n_instrs:
+                raise ContainerError(f"kernel {i}: label position {pos} past end")
+            labels.append((_StrTab.read(strtab, noff), pos))
+
+        items = encoding.decode_text(sections[text_sec][2], n_instrs, labels, tags)
+        kernel = Kernel(
+            name=_StrTab.read(strtab, name_off),
+            items=items,
+            threads_per_block=threads,
+            num_blocks=blocks,
+            shared_size=shared,
+            demoted_size=demoted,
+            live_in=_unmask(live_in_mask),
+            live_out=_unmask(live_out_mask),
+            rda=None if rda == _NONE16 else rda,
+        )
+        if kernel.reg_count != reg_count:
+            raise ContainerError(
+                f"kernel {kernel.name}: declared reg count {reg_count} != "
+                f"recomputed {kernel.reg_count}"
+            )
+        kernels.append(kernel)
+    return kernels
+
+
+def loads(data: bytes) -> Kernel:
+    """Deserialize a single-kernel container."""
+    kernels = loads_many(data)
+    if len(kernels) != 1:
+        raise ContainerError(
+            f"expected a single-kernel container, found {len(kernels)} "
+            "(use loads_many)"
+        )
+    return kernels[0]
+
+
+def kernel_names(data: bytes) -> List[str]:
+    """Kernel names in the container, without decoding any text section."""
+    sections, n_kernels = _parse_sections(data)
+    strtab = next(payload for _, kind, payload in sections if kind == SEC_STRTAB)
+    kinfo = next((payload for _, kind, payload in sections if kind == SEC_KINFO), None)
+    if kinfo is None or len(kinfo) != n_kernels * KINFO_SIZE:
+        raise ContainerError("malformed .kinfo section")
+    return [
+        _StrTab.read(strtab, _KINFO.unpack_from(kinfo, i * KINFO_SIZE)[0])
+        for i in range(n_kernels)
+    ]

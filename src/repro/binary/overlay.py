@@ -1,0 +1,78 @@
+"""SASSOverlay-style annotated disassembly.
+
+Renders a kernel the way ``sassoverlay.py`` augments ``nvdisasm`` output:
+each instruction line carries its text-section byte address and a control
+column block
+
+    [ stall Y | WRn RDn  wwwwww ]
+
+where ``stall`` is the issue-stall count, ``Y`` marks a yielding slot,
+``WRn``/``RDn`` are the write/read scoreboard barriers the instruction
+*sets*, and ``wwwwww`` is the 6-bit mask of barriers it *waits* on.  This is
+the debugging view for schedule inspection and predictor calibration: stall
+chains and barrier round trips are visible at a glance, column-aligned.
+"""
+
+from __future__ import annotations
+
+from typing import List, Union
+
+from repro.core.isa import Ctrl, Instr, Kernel, Label
+
+from .ctrlwords import pack_ctrl
+from .encoding import instr_addr
+
+
+def format_ctrl_columns(ctrl: Ctrl) -> str:
+    """One control word as a fixed-width ``[ .. | .. ]`` column block."""
+    stall = str(ctrl.stall)
+    y = "Y" if ctrl.yield_flag else " "
+    wr = f"WR{ctrl.write_bar}" if ctrl.write_bar is not None else "   "
+    rd = f"RD{ctrl.read_bar}" if ctrl.read_bar is not None else "   "
+    wait = "".join(
+        "1" if b in ctrl.wait else "0" for b in reversed(range(6))
+    ) if ctrl.wait else "......"
+    return f"[{stall:>2s} {y} | {wr} {rd} {wait} ]"
+
+
+def _strip_ctrl_comment(rendered: str) -> str:
+    """Drop the leading ``/*ww:r:w:y:s*/`` comment from ``Instr.render``."""
+    if rendered.startswith("/*"):
+        end = rendered.find("*/")
+        if end != -1:
+            return rendered[end + 2 :].lstrip()
+    return rendered
+
+
+def overlay_lines(kernel: Union[Kernel, List[object]]) -> List[str]:
+    """Annotated disassembly lines for a kernel (or raw item list)."""
+    items = kernel.items if isinstance(kernel, Kernel) else kernel
+    lines: List[str] = []
+    if isinstance(kernel, Kernel):
+        lines.append(
+            f"// kernel {kernel.name}  regs={kernel.reg_count} "
+            f"threads/block={kernel.threads_per_block} "
+            f"smem={kernel.shared_size}+{kernel.demoted_size}B "
+            f"ctrl=[stall Y | WR RD wait]"
+        )
+    body_width = max(
+        (len(_strip_ctrl_comment(it.render())) for it in items if isinstance(it, Instr)),
+        default=0,
+    )
+    idx = 0
+    for it in items:
+        if isinstance(it, Label):
+            lines.append(it.render())
+            continue
+        body = _strip_ctrl_comment(it.render())
+        lines.append(
+            f"/*{instr_addr(idx):04x}*/ {body:<{body_width}s}  "
+            f"{format_ctrl_columns(it.ctrl)} /*{pack_ctrl(it.ctrl):06x}*/"
+        )
+        idx += 1
+    return lines
+
+
+def overlay(kernel: Union[Kernel, List[object]]) -> str:
+    """Annotated disassembly as one string (see :func:`overlay_lines`)."""
+    return "\n".join(overlay_lines(kernel))

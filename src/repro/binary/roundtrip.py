@@ -1,0 +1,69 @@
+"""Encode/decode self-checks for the binary substrate.
+
+The translator's guarantee is *semantic*: a container emitted by pyReDe must
+decode to a kernel that is dataflow-equivalent to what was encoded, carry an
+identical schedule, and re-render to the identical SASS text.  This module
+is that oracle; :func:`repro.core.translator.translate` calls it on every
+container it emits, and the test suite runs it over the whole kernelgen
+corpus.
+"""
+
+from __future__ import annotations
+
+from repro.core.isa import Kernel, equivalent
+from repro.core.sched import verify_schedule
+
+from .container import dumps, loads
+
+
+class RoundTripError(AssertionError):
+    """A container failed the encode/decode self-check."""
+
+
+def roundtrip(kernel: Kernel) -> Kernel:
+    """``loads(dumps(kernel))`` — one trip through the container."""
+    return loads(dumps(kernel))
+
+
+def verified_dumps(kernel: Kernel, check_semantics: bool = True) -> bytes:
+    """Serialize the kernel and prove the container round trip is faithful;
+    returns the verified container bytes.
+
+    Checks, strongest first:
+
+    1. the re-rendered SASS text is byte-identical (control words included),
+       so encode/decode is the identity on the observable program;
+    2. the decoded kernel re-encodes to the identical container bytes
+       (serialization is deterministic and stable);
+    3. schedule validity is preserved exactly (same violation list, which is
+       empty for anything the translator emits);
+    4. optionally, the decoded kernel is dataflow-equivalent on the
+       interpreter — the same oracle the translator applies to demotion.
+    """
+    blob = dumps(kernel)
+    _check_against(kernel, blob, check_semantics)
+    return blob
+
+
+def check_roundtrip(kernel: Kernel, check_semantics: bool = True) -> Kernel:
+    """Assert the container round trip is faithful (see
+    :func:`verified_dumps`); returns the decoded kernel."""
+    blob = dumps(kernel)
+    return _check_against(kernel, blob, check_semantics)
+
+
+def _check_against(kernel: Kernel, blob: bytes, check_semantics: bool) -> Kernel:
+    decoded = loads(blob)
+    if decoded.render() != kernel.render():
+        raise RoundTripError(
+            f"{kernel.name}: decode(encode(k)) renders differently:\n"
+            f"--- original ---\n{kernel.render()}\n"
+            f"--- decoded ---\n{decoded.render()}"
+        )
+    if dumps(decoded) != blob:
+        raise RoundTripError(f"{kernel.name}: container bytes are not stable")
+    if verify_schedule(decoded) != verify_schedule(kernel):
+        raise RoundTripError(f"{kernel.name}: schedule violations changed across round trip")
+    if check_semantics and not equivalent(kernel, decoded):
+        raise RoundTripError(f"{kernel.name}: decoded kernel is not dataflow-equivalent")
+    return decoded

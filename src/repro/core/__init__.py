@@ -15,6 +15,15 @@ Faithful-reproduction layer:
 * :mod:`repro.core.predictor`   §4 compile-time performance predictor
 * :mod:`repro.core.translator`  pyReDe pipeline with self-checks
 
+Binary substrate (the pseudo-cubin layer the translator runs on; see
+README.md "Binary container format"):
+
+* :mod:`repro.binary.ctrlwords`  21-bit Maxwell control-word packing
+* :mod:`repro.binary.encoding`   fixed-width instruction records
+* :mod:`repro.binary.container`  pseudo-cubin ``dumps``/``loads``
+* :mod:`repro.binary.overlay`    SASSOverlay-style annotated disassembly
+* :mod:`repro.binary.roundtrip`  encode/decode self-check oracle
+
 TPU-adaptation layer (see DESIGN.md §2):
 
 * :mod:`repro.core.vmem_demotion`  VMEM-scratch residency policies
@@ -24,7 +33,7 @@ TPU-adaptation layer (see DESIGN.md §2):
 from .isa import Instr, Kernel, Label, equivalent, parse_kernel
 from .occupancy import MAXWELL, Occupancy, occupancy, occupancy_of, spill_targets
 from .regdem import RegDemOptions, RegDemResult, auto_targets, demote
-from .translator import TranslationReport, translate
+from .translator import TranslationReport, translate, translate_binary
 
 __all__ = [
     "Instr",
@@ -43,4 +52,5 @@ __all__ = [
     "demote",
     "TranslationReport",
     "translate",
+    "translate_binary",
 ]

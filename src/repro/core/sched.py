@@ -14,6 +14,12 @@ Two entry points:
   are interacting compiler passes, [so] our optimization considers the
   effect on the instruction schedule and performs updates where needed").
 
+The scheduler's output travels in *machine form*: :func:`export_ctrl_words`
+packs every instruction's control into the 21-bit Maxwell layout of
+:mod:`repro.binary.ctrlwords` (what the container's text sections store) and
+:func:`import_ctrl_words` applies packed words back onto an instruction
+stream, so schedules survive the binary->binary pipeline losslessly.
+
 Scheduling model (per basic block, matching the simulator):
 
 * A fixed-latency producer (FP32/INT ALU, 6 cycles) must be separated from
@@ -166,6 +172,36 @@ def _schedule_block(block: List[Instr]) -> None:
         pend = set(barrier_of_reg.values()) | set(read_guard.values())
         pend |= {b for b in range(NUM_BARRIERS) if barrier_busy[b]}
         last.ctrl.wait |= pend
+
+
+def export_ctrl_words(kernel: Kernel) -> List[int]:
+    """The kernel's schedule as packed 21-bit control words, one per
+    instruction in stream order (machine form of :func:`schedule`'s output)."""
+    from repro.binary.ctrlwords import pack_ctrl
+
+    return [pack_ctrl(ins.ctrl) for ins in kernel.instructions()]
+
+
+def import_ctrl_words(kernel: Kernel, words: List[int]) -> Kernel:
+    """Apply packed 21-bit control words onto the kernel's instructions
+    in-place (inverse of :func:`export_ctrl_words`); returns the kernel."""
+    from repro.binary.ctrlwords import unpack_ctrl
+
+    instrs = kernel.instructions()
+    if len(words) != len(instrs):
+        raise ValueError(
+            f"{kernel.name}: {len(words)} control words for {len(instrs)} instructions"
+        )
+    for ins, word in zip(instrs, words):
+        ins.ctrl = unpack_ctrl(word)
+    return kernel
+
+
+def verify_ctrl_words(kernel: Kernel, words: List[int]) -> List[str]:
+    """Validate a packed control-word stream against a kernel's instruction
+    stream without mutating it: the words are applied to a copy and checked
+    with :func:`verify_schedule`."""
+    return verify_schedule(import_ctrl_words(kernel.copy(), words))
 
 
 def fixup_stalls(kernel: Kernel) -> Kernel:

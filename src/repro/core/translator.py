@@ -1,14 +1,20 @@
 """pyReDe — the binary translator driver (paper §1, §5.1).
 
 The paper's tool extracts SASS from a ``.cubin``, applies RegDem, and
-re-inserts the code with MaxAs.  Here the "binary" is the textual rendering
-of the abstract ISA; the driver exposes the same pipeline:
+re-inserts the code with MaxAs.  The same pipeline runs here on the
+pseudo-cubin container of :mod:`repro.binary`:
 
-    parse -> choose targets -> transform (RegDem) -> self-check -> re-emit
+    disassemble (loads) -> choose targets -> transform (RegDem)
+        -> self-check -> reassemble (dumps)
+
+``translate`` is bytes-in / bytes-out when handed container bytes — a true
+binary->binary translator — and also accepts an in-memory :class:`Kernel`,
+returning the full :class:`TranslationReport` for inspection.
 
 The self-check runs the schedule verifier and the dataflow-equivalence
-oracle on every emitted variant — a translated binary that fails either is
-a translator bug, never a tolerated output.
+oracle on every emitted variant, and the container round-trip oracle on
+every emitted binary — a translated binary that fails any of these is a
+translator bug, never a tolerated output.
 
 ``translate`` is the "automatic utility" of §3: it enumerates occupancy
 cliffs, generates a RegDem variant per (target x option-combination), and
@@ -19,7 +25,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 from .candidates import STRATEGIES
 from .isa import Kernel, equivalent, parse_kernel
@@ -97,12 +103,26 @@ def self_check(original: Kernel, transformed: Kernel, label: str) -> None:
 
 
 def translate(
-    kernel: Kernel,
+    kernel: Union[Kernel, bytes, bytearray, memoryview],
     target_regs: Optional[int] = None,
     options: Optional[List[RegDemOptions]] = None,
     use_predictor: bool = True,
-) -> TranslationReport:
-    """Run the full pyReDe pipeline on one kernel."""
+) -> Union[TranslationReport, bytes]:
+    """Run the full pyReDe pipeline on one kernel.
+
+    Given a :class:`Kernel`, returns the :class:`TranslationReport`.  Given
+    pseudo-cubin container bytes (:func:`repro.binary.dumps`), runs the same
+    pipeline binary->binary and returns the container bytes of the chosen
+    variant — the paper's actual tool shape.
+    """
+    if isinstance(kernel, (bytes, bytearray, memoryview)):
+        out, _ = translate_binary(
+            bytes(kernel),
+            target_regs=target_regs,
+            options=options,
+            use_predictor=use_predictor,
+        )
+        return out
     targets = [target_regs] if target_regs is not None else auto_targets(kernel)
     opts = options or option_space()
 
@@ -137,8 +157,44 @@ def translate(
     )
 
 
+def translate_binary(
+    data: bytes,
+    target_regs: Optional[int] = None,
+    options: Optional[List[RegDemOptions]] = None,
+    use_predictor: bool = True,
+) -> Tuple[bytes, TranslationReport]:
+    """Binary->binary pyReDe: container bytes in, container bytes out.
+
+    Disassembles the single-kernel container, runs :func:`translate`, and
+    reassembles the chosen variant (the unmodified input kernel when the
+    predictor keeps the nvcc baseline).  The emitted container passes the
+    round-trip oracle before being returned.
+    """
+    from repro.binary import container
+    from repro.binary.roundtrip import RoundTripError, verified_dumps
+
+    kernel = container.loads(data)
+    report = translate(
+        kernel,
+        target_regs=target_regs,
+        options=options,
+        use_predictor=use_predictor,
+    )
+    chosen = kernel if report.chosen == "nvcc" else report.chosen_kernel
+    try:
+        out = verified_dumps(chosen)
+    except RoundTripError as exc:
+        raise TranslationError(str(exc)) from exc
+    return out, report
+
+
 def roundtrip(kernel: Kernel) -> Kernel:
-    """Assembler/disassembler round trip (the MaxAs insertion step)."""
+    """Assembler/disassembler round trip (the MaxAs insertion step).
+
+    Pushes the kernel through *both* codecs — the textual SASS rendering and
+    the binary container — and demands they agree: an instability in either
+    direction is a translator bug.
+    """
     text = kernel.render()
     k2 = parse_kernel(
         text,
@@ -151,5 +207,12 @@ def roundtrip(kernel: Kernel) -> Kernel:
     )
     k2.rda = kernel.rda
     if k2.render().splitlines()[1:] != text.splitlines()[1:]:
-        raise TranslationError(f"{kernel.name}: unstable round trip")
-    return k2
+        raise TranslationError(f"{kernel.name}: unstable text round trip")
+    from repro.binary.roundtrip import RoundTripError, check_roundtrip
+
+    # check_roundtrip's render-identity check is the cross-codec agreement:
+    # the decoded kernel re-renders to the exact text parsed above.
+    try:
+        return check_roundtrip(kernel, check_semantics=False)
+    except RoundTripError as exc:
+        raise TranslationError(str(exc)) from exc

@@ -1,5 +1,9 @@
 """Property-based tests (hypothesis) for the system's invariants."""
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core.compaction import compact, packed_reg_count
