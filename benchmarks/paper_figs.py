@@ -16,7 +16,6 @@ from repro.core.occupancy import occupancy_of
 from repro.core.predictor import predict, predict_naive
 from repro.core.regdem import RegDemOptions, demote
 from repro.core.simulator import SimResult, simulate, speedup
-from repro.core.translator import option_space
 from repro.core.variants import make_variants
 
 CLOCK_GHZ = 1.075  # GTX Titan X boost clock

@@ -1,0 +1,112 @@
+"""Pass-pipeline / translation-service benchmarks.
+
+Measures the batch binary-translation service end to end: a multi-kernel v2
+container (with a repeated kernel) is translated cold (every kernel runs the
+pass pipeline) and then warm (every kernel served from the content-CRC
+translation cache), giving batch throughput, cache hit rate, and a per-pass
+wall-time breakdown.  Rows follow the harness CSV contract
+(``name,us_per_call,derived``); the same numbers are written to
+``BENCH_pipeline.json`` so the performance trajectory accumulates
+machine-readably across PRs.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, Iterator, Optional
+
+from repro.binary import dumps
+from repro.core.kernelgen import paper_kernel
+from repro.core.regdem import RegDemOptions
+from repro.core.translator import TranslationService
+
+#: Default location of the machine-readable report (cwd-relative, i.e. the
+#: repo root under the documented ``python -m benchmarks.run`` invocation).
+JSON_PATH = "BENCH_pipeline.json"
+
+#: Batch composition: four distinct Table-1 kernels, each appearing twice,
+#: so even the cold call exercises the cache on the duplicates.
+BATCH_NAMES = ["md5hash", "nn", "conv", "pc", "md5hash", "nn", "conv", "pc"]
+
+
+def pipeline_rows(json_path: Optional[str] = JSON_PATH) -> Iterator[str]:
+    """Yield CSV rows; write ``BENCH_pipeline.json`` as a side effect."""
+    kernels = [paper_kernel(n) for n in BATCH_NAMES]
+    blob = dumps(kernels)
+    n_kernels = len(kernels)
+    n_instrs = sum(len(k.instructions()) for k in kernels)
+
+    # one grouped option set keeps the enumeration representative but cheap
+    service = TranslationService(options=[RegDemOptions()])
+
+    t0 = time.perf_counter()
+    out_cold, rep_cold = service.translate(blob)
+    cold_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    out_warm, rep_warm = service.translate(blob)
+    warm_s = time.perf_counter() - t0
+    assert out_warm == out_cold, "warm batch must be byte-identical"
+
+    # per-pass wall-time breakdown over every pipeline the cold call ran
+    # (cache-hit entries share the miss's report object — skip them so
+    # passes are not double-counted)
+    passes: Dict[str, Dict[str, float]] = {}
+    for rep, was_cached in zip(rep_cold.reports, rep_cold.cached):
+        if was_cached:
+            continue
+        for stats in rep.pass_stats.values():
+            for p in stats:
+                agg = passes.setdefault(p.name, {"calls": 0, "total_ms": 0.0})
+                agg["calls"] += 1
+                agg["total_ms"] += p.seconds * 1e3
+    total_pass_ms = sum(a["total_ms"] for a in passes.values()) or 1.0
+    for agg in passes.values():
+        agg["total_ms"] = round(agg["total_ms"], 3)
+        agg["share"] = round(agg["total_ms"] / total_pass_ms, 3)
+
+    report = {
+        "batch": {
+            "kernels": n_kernels,
+            "unique_kernels": len(set(BATCH_NAMES)),
+            "instrs": n_instrs,
+            "container_bytes_in": len(blob),
+            "container_bytes_out": len(out_cold),
+            "cold_us_per_kernel": round(cold_s * 1e6 / n_kernels, 1),
+            "warm_us_per_kernel": round(warm_s * 1e6 / n_kernels, 1),
+            "cold_kernels_per_s": round(n_kernels / cold_s, 1),
+            "warm_kernels_per_s": round(n_kernels / warm_s, 1),
+            "warm_speedup": round(cold_s / warm_s, 1),
+        },
+        "cache": {
+            "cold_hits": rep_cold.cache_hits,
+            "cold_misses": rep_cold.cache_misses,
+            "cold_hit_rate": round(rep_cold.hit_rate, 3),
+            "warm_hits": rep_warm.cache_hits,
+            "warm_misses": rep_warm.cache_misses,
+            "warm_hit_rate": round(rep_warm.hit_rate, 3),
+        },
+        "passes": passes,
+    }
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+    b, c = report["batch"], report["cache"]
+    yield (
+        f"pipeline_batch_cold,{cold_s * 1e6 / n_kernels:.1f},"
+        f"kernels_per_s={b['cold_kernels_per_s']};hit_rate={c['cold_hit_rate']}"
+    )
+    yield (
+        f"pipeline_batch_warm,{warm_s * 1e6 / n_kernels:.1f},"
+        f"kernels_per_s={b['warm_kernels_per_s']};hit_rate={c['warm_hit_rate']}"
+    )
+    yield f"pipeline_cache_speedup,0.00,warm_speedup={b['warm_speedup']}x"
+    for name in sorted(passes):
+        agg = passes[name]
+        yield (
+            f"pipeline_pass_{name},{agg['total_ms'] * 1e3 / max(agg['calls'], 1):.1f},"
+            f"calls={agg['calls']};share={agg['share']}"
+        )

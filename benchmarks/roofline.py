@@ -21,13 +21,7 @@ import json
 import os
 from typing import Any, Dict, List, Optional
 
-from repro.configs import (
-    ShapeCell,
-    active_param_count,
-    get_config,
-    param_count,
-    shape_cells,
-)
+from repro.configs import active_param_count, get_config, param_count, shape_cells
 from repro.launch.specs import cell_geometry
 
 # TPU v5e hardware constants (per chip)

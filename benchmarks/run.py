@@ -9,6 +9,8 @@ Sections:
   fig9      predictor vs oracle vs naive           (paper Fig. 9)
   roofline  dry-run three-term roofline per cell   (EXPERIMENTS §Roofline)
   binary    pseudo-cubin codec throughput + sizes  (writes BENCH_binary.json)
+  pipeline  batch-translate throughput, cache hit rate, per-pass breakdown
+            (writes BENCH_pipeline.json)
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One section: ``... -m benchmarks.run --only fig6``
@@ -22,16 +24,22 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="table1|fig6|fig7|fig8|fig9|roofline|binary")
+                    help="table1|fig6|fig7|fig8|fig9|roofline|binary|pipeline")
     ap.add_argument("--binary-json", default=None, metavar="PATH",
                     help="where the binary section writes its JSON report "
                          "(default: BENCH_binary.json in the cwd)")
+    ap.add_argument("--pipeline-json", default=None, metavar="PATH",
+                    help="where the pipeline section writes its JSON report "
+                         "(default: BENCH_pipeline.json in the cwd)")
     args = ap.parse_args()
 
-    from benchmarks import binary_bench, paper_figs, roofline, tpu_selector
+    from benchmarks import binary_bench, paper_figs, pipeline_bench, roofline, tpu_selector
 
     def binary_rows():
         return binary_bench.binary_rows(args.binary_json or binary_bench.JSON_PATH)
+
+    def pipeline_rows():
+        return pipeline_bench.pipeline_rows(args.pipeline_json or pipeline_bench.JSON_PATH)
 
     sections = {
         "table1": paper_figs.table1_occupancy,
@@ -42,6 +50,7 @@ def main() -> None:
         "roofline": roofline.roofline_rows,
         "tpu_selector": tpu_selector.selector_rows,
         "binary": binary_rows,
+        "pipeline": pipeline_rows,
     }
     print("name,us_per_call,derived")
     for name, fn in sections.items():

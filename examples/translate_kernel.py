@@ -11,16 +11,43 @@ The pipeline is binary->binary: the kernel is serialized to pseudo-cubin
 container bytes, translated bytes-in/bytes-out, and disassembled again.
 ``--overlay`` prints the chosen variant as SASSOverlay-style annotated
 disassembly (stall / yield / barrier columns).
+
+``--batch`` exercises the multi-kernel service instead: it packs several
+benchmark kernels (plus a duplicate) into ONE v2 container, translates it in
+one call, and prints per-kernel outcomes and the translation-cache hit rate:
+
+    PYTHONPATH=src python examples/translate_kernel.py --batch cfd,nn,cfd
 """
 
 import argparse
 
-from repro.binary import dumps, loads, overlay
-from repro.core import occupancy_of, translate_binary
+from repro.binary import dumps, kernel_names, loads, loads_many, overlay
+from repro.core import TranslationService, occupancy_of, translate_binary
 from repro.core.isa import equivalent
 from repro.core.kernelgen import PAPER_BENCHMARKS, paper_kernel
 from repro.core.regdem import auto_targets
 from repro.core.simulator import simulate, speedup
+
+
+def run_batch(names) -> None:
+    """Pack the named kernels into one multi-kernel container and translate
+    the whole batch in a single call."""
+    kernels = [paper_kernel(n) for n in names]
+    blob = dumps(kernels)
+    print(f"batch: {len(kernels)} kernels {names} in one {len(blob)}B container "
+          f"({kernel_names(blob)})")
+    service = TranslationService()
+    out, report = service.translate(blob)
+    translated = loads_many(out)
+    for orig, dec, rep, hit in zip(kernels, translated, report.reports, report.cached):
+        src = "cache" if hit else f"{len(rep.considered)} variants"
+        print(f"  {orig.name:10s} {orig.reg_count:3d} -> {dec.reg_count:3d} regs, "
+              f"chose {rep.chosen} ({src})")
+        assert equivalent(orig, dec), "translation must preserve semantics"
+    print(f"one call: {len(blob)}B in, {len(out)}B out; cache "
+          f"{report.cache_hits} hits / {report.cache_misses} misses "
+          f"(hit rate {report.hit_rate:.2f})")
+    print("OK")
 
 
 def main() -> None:
@@ -28,7 +55,21 @@ def main() -> None:
     ap.add_argument("--kernel", default="cfd", choices=sorted(PAPER_BENCHMARKS))
     ap.add_argument("--overlay", action="store_true",
                     help="print annotated disassembly of the chosen variant")
+    ap.add_argument("--batch", nargs="?", const="cfd,nn,md5hash,cfd", default=None,
+                    metavar="K1,K2,...",
+                    help="translate several kernels as one multi-kernel "
+                         "container (default batch repeats cfd to show the "
+                         "translation cache)")
     args = ap.parse_args()
+
+    if args.batch:
+        names = [n.strip() for n in args.batch.split(",") if n.strip()]
+        bad = [n for n in names if n not in PAPER_BENCHMARKS]
+        if bad or not names:
+            ap.error(f"--batch: invalid kernel name(s) {bad or args.batch!r} "
+                     f"(choose from {', '.join(sorted(PAPER_BENCHMARKS))})")
+        run_batch(names)
+        return
 
     k = paper_kernel(args.kernel)
     occ = occupancy_of(k)

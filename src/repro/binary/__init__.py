@@ -20,7 +20,15 @@ Modules
   equivalence + schedule validity + stable re-render)
 """
 
-from .container import ContainerError, dumps, kernel_names, loads, loads_many
+from .container import (
+    VERSION,
+    ContainerError,
+    dumps,
+    kernel_crc,
+    kernel_names,
+    loads,
+    loads_many,
+)
 from .ctrlwords import (
     CTRL_BITS,
     pack_bundle,
@@ -37,11 +45,18 @@ from .encoding import (
     encode_text,
 )
 from .overlay import format_ctrl_columns, overlay, overlay_lines
-from .roundtrip import RoundTripError, check_roundtrip, roundtrip, verified_dumps
+from .roundtrip import (
+    RoundTripError,
+    check_roundtrip,
+    roundtrip,
+    verified_dumps,
+    verified_dumps_many,
+)
 
 __all__ = [
     "CTRL_BITS",
     "INSTR_RECORD_SIZE",
+    "VERSION",
     "ContainerError",
     "EncodingError",
     "RoundTripError",
@@ -52,6 +67,7 @@ __all__ = [
     "encode_instr",
     "encode_text",
     "format_ctrl_columns",
+    "kernel_crc",
     "kernel_names",
     "loads",
     "loads_many",
@@ -63,4 +79,5 @@ __all__ = [
     "unpack_bundle",
     "unpack_ctrl",
     "verified_dumps",
+    "verified_dumps_many",
 ]

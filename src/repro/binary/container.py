@@ -26,20 +26,30 @@ section table (16 B/row)  (name, kind, offset, size) per section, ELF-style
 opcode-table checksum, section bounds, declared vs. recomputed register
 count) is checked on load, so a corrupted or stale container fails loudly
 instead of producing a subtly wrong kernel.
+
+Format v2 (current) extends the v1 ``.kinfo`` record with a **per-kernel
+content CRC** — :func:`kernel_crc` over the kernel's name, launch metadata,
+tag/label tables, and text bytes.  It is the integrity check for each kernel
+of a multi-kernel container and the key of the translation cache
+(:class:`repro.core.translator.TranslationCache`): two kernels with equal
+CRCs translate to byte-identical output, so repeated kernels skip the pass
+pipeline entirely.  ``loads``/``loads_many`` accept v1 containers
+unchanged (no stored CRC, everything else identical).
 """
 
 from __future__ import annotations
 
 import struct
 import zlib
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+from typing import Dict, Iterable, List, Sequence, Tuple, Union
 
 from repro.core.isa import OPCODES, Kernel
 
 from . import encoding
 
 MAGIC = b"RDEMCBN\x01"
-VERSION = 1
+VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 
 #: Section kinds (the ``kind`` column of the section table).
 SEC_NULL, SEC_STRTAB, SEC_KINFO, SEC_TEXT, SEC_LABELS = range(5)
@@ -50,8 +60,11 @@ _HDR = struct.Struct("<8sHHIHHIII")  # magic, version, n_sections, shoff,
 _HDR_PAD = 32 - _HDR.size
 _SEC = struct.Struct("<IIII")  # name_off, kind, offset, size
 _LBL = struct.Struct("<II")  # name_off, instr_idx
-_KINFO = struct.Struct("<IIIHHIIIIIHH16I32s32s")
-KINFO_SIZE = _KINFO.size
+_KINFO_V1 = struct.Struct("<IIIHHIIIIIHH16I32s32s")
+_KINFO_V2 = struct.Struct("<IIIHHIIIIIHH16I32s32sI")  # v1 + per-kernel CRC
+_KINFO_BY_VERSION = {1: _KINFO_V1, 2: _KINFO_V2}
+KINFO_SIZES = {v: s.size for v, s in _KINFO_BY_VERSION.items()}
+KINFO_SIZE = KINFO_SIZES[VERSION]
 _NONE16 = 0xFFFF
 _MAX_TAGS = 16
 
@@ -64,6 +77,60 @@ def opcode_checksum() -> int:
     """CRC of the ISA opcode table — guards against decoding a container
     produced under a different opcode numbering."""
     return zlib.crc32(",".join(OPCODES).encode()) & 0xFFFFFFFF
+
+
+def _content_crc(
+    name: str,
+    threads: int,
+    blocks: int,
+    shared: int,
+    demoted: int,
+    reg_count: int,
+    rda_enc: int,
+    live_in_mask: bytes,
+    live_out_mask: bytes,
+    tags: Sequence[str],
+    labels: Sequence[Tuple[str, int]],
+    text: bytes,
+) -> int:
+    """The per-kernel content CRC over everything translation can observe.
+
+    Computed from *resolved* strings (never strtab offsets), so the value is
+    independent of section layout, sibling kernels, and container version —
+    which is what makes it usable as the translation-cache key."""
+    h = zlib.crc32(name.encode("utf-8"))
+    h = zlib.crc32(
+        struct.pack("<IIIIIH", threads, blocks, shared, demoted, reg_count, rda_enc), h
+    )
+    h = zlib.crc32(live_in_mask, h)
+    h = zlib.crc32(live_out_mask, h)
+    h = zlib.crc32("\x00".join(tags).encode("utf-8"), h)
+    for lbl_name, pos in labels:
+        h = zlib.crc32(lbl_name.encode("utf-8") + struct.pack("<I", pos), h)
+    h = zlib.crc32(text, h)
+    return h & 0xFFFFFFFF
+
+
+def kernel_crc(kernel: Kernel) -> int:
+    """Content CRC of one kernel — what a v2 container stores in ``.kinfo``
+    and what keys the translation cache.  Equal CRCs mean the binary
+    translator produces byte-identical output."""
+    tags = encoding.collect_tags(kernel.items)
+    text, labels = encoding.encode_text(kernel.items, tags)
+    return _content_crc(
+        kernel.name,
+        kernel.threads_per_block,
+        kernel.num_blocks,
+        kernel.shared_size,
+        kernel.demoted_size,
+        kernel.reg_count,
+        _NONE16 if kernel.rda is None else kernel.rda,
+        _regmask(kernel.live_in),
+        _regmask(kernel.live_out),
+        tags,
+        labels,
+        text,
+    )
 
 
 def _regmask(regs: Iterable[int]) -> bytes:
@@ -103,8 +170,13 @@ class _StrTab:
         return blob[off:end].decode("utf-8")
 
 
-def dumps(kernels: Union[Kernel, Iterable[Kernel]]) -> bytes:
-    """Serialize one kernel (or an iterable of kernels) to container bytes."""
+def dumps(kernels: Union[Kernel, Iterable[Kernel]], version: int = VERSION) -> bytes:
+    """Serialize one kernel (or an iterable of kernels) to container bytes.
+
+    ``version`` selects the container format (v2 default; v1 writes the
+    legacy record without per-kernel CRCs, for interop tests)."""
+    if version not in SUPPORTED_VERSIONS:
+        raise ContainerError(f"cannot write container version {version}")
     klist = [kernels] if isinstance(kernels, Kernel) else list(kernels)
     if not klist:
         raise ContainerError("cannot serialize an empty kernel list")
@@ -125,25 +197,43 @@ def dumps(kernels: Union[Kernel, Iterable[Kernel]]) -> bytes:
         sections.append((f".labels.{kernel.name}", SEC_LABELS, lbl_blob))
 
         tag_offs = [strtab.add(t) for t in tags] + [0] * (_MAX_TAGS - len(tags))
-        kinfo_records.append(
-            _KINFO.pack(
-                strtab.add(kernel.name),
-                len(kernel.instructions()),
-                len(labels),
-                text_sec,
-                text_sec + 1,
+        rda_enc = _NONE16 if kernel.rda is None else kernel.rda
+        live_in_mask = _regmask(kernel.live_in)
+        live_out_mask = _regmask(kernel.live_out)
+        fields = (
+            strtab.add(kernel.name),
+            len(kernel.instructions()),
+            len(labels),
+            text_sec,
+            text_sec + 1,
+            kernel.threads_per_block,
+            kernel.num_blocks,
+            kernel.shared_size,
+            kernel.demoted_size,
+            kernel.reg_count,
+            rda_enc,
+            len(tags),
+            *tag_offs,
+            live_in_mask,
+            live_out_mask,
+        )
+        if version >= 2:
+            crc = _content_crc(
+                kernel.name,
                 kernel.threads_per_block,
                 kernel.num_blocks,
                 kernel.shared_size,
                 kernel.demoted_size,
                 kernel.reg_count,
-                _NONE16 if kernel.rda is None else kernel.rda,
-                len(tags),
-                *tag_offs,
-                _regmask(kernel.live_in),
-                _regmask(kernel.live_out),
+                rda_enc,
+                live_in_mask,
+                live_out_mask,
+                tags,
+                labels,
+                text,
             )
-        )
+            fields = fields + (crc,)
+        kinfo_records.append(_KINFO_BY_VERSION[version].pack(*fields))
 
     sections.insert(1, (".kinfo", SEC_KINFO, b"".join(kinfo_records)))
     sections.append((".strtab", SEC_STRTAB, b""))  # payload patched below
@@ -166,7 +256,7 @@ def dumps(kernels: Union[Kernel, Iterable[Kernel]]) -> bytes:
     body = bytes(payload) + b"".join(rows)
     header = _HDR.pack(
         MAGIC,
-        VERSION,
+        version,
         len(sections),
         shoff,
         strtab_index,
@@ -178,16 +268,16 @@ def dumps(kernels: Union[Kernel, Iterable[Kernel]]) -> bytes:
     return header + body
 
 
-def _parse_sections(data: bytes) -> Tuple[List[Tuple[str, int, bytes]], int]:
-    """Validate the envelope and return ``[(name, kind, payload)]`` plus the
-    kernel count."""
+def _parse_sections(data: bytes) -> Tuple[List[Tuple[str, int, bytes]], int, int]:
+    """Validate the envelope and return ``[(name, kind, payload)]``, the
+    kernel count, and the container version."""
     if len(data) < 32:
         raise ContainerError("container truncated before header")
     (magic, version, n_sections, shoff, strtab_index, n_kernels, opc_crc, total,
      content_crc) = _HDR.unpack(data[: _HDR.size])
     if magic != MAGIC:
         raise ContainerError(f"bad magic {magic!r}")
-    if version != VERSION:
+    if version not in SUPPORTED_VERSIONS:
         raise ContainerError(f"unsupported container version {version}")
     if opc_crc != opcode_checksum():
         raise ContainerError(
@@ -213,28 +303,31 @@ def _parse_sections(data: bytes) -> Tuple[List[Tuple[str, int, bytes]], int]:
     out = []
     for name_off, kind, offset, size in raw_rows:
         out.append((_StrTab.read(strtab, name_off), kind, data[offset : offset + size]))
-    return out, n_kernels
+    return out, n_kernels, version
 
 
 def loads_many(data: bytes) -> List[Kernel]:
-    """Deserialize every kernel in the container."""
-    sections, n_kernels = _parse_sections(data)
+    """Deserialize every kernel in the container (any supported version)."""
+    sections, n_kernels, version = _parse_sections(data)
+    kinfo_struct = _KINFO_BY_VERSION[version]
+    kinfo_size = kinfo_struct.size
     strtab = next(payload for _, kind, payload in sections if kind == SEC_STRTAB)
     kinfo = next((payload for _, kind, payload in sections if kind == SEC_KINFO), None)
     if kinfo is None:
         raise ContainerError("container has no .kinfo section")
-    if len(kinfo) != n_kernels * KINFO_SIZE:
+    if len(kinfo) != n_kernels * kinfo_size:
         raise ContainerError(
-            f".kinfo holds {len(kinfo)} bytes, expected {n_kernels * KINFO_SIZE}"
+            f".kinfo holds {len(kinfo)} bytes, expected {n_kernels * kinfo_size}"
         )
 
     kernels: List[Kernel] = []
     for i in range(n_kernels):
-        rec = _KINFO.unpack_from(kinfo, i * KINFO_SIZE)
+        rec = kinfo_struct.unpack_from(kinfo, i * kinfo_size)
         (name_off, n_instrs, n_labels, text_sec, labels_sec,
          threads, blocks, shared, demoted, reg_count, rda, n_tags) = rec[:12]
         tag_offs = rec[12:28]
         live_in_mask, live_out_mask = rec[28], rec[29]
+        stored_crc = rec[30] if version >= 2 else None
         if not 0 < n_tags <= _MAX_TAGS:
             raise ContainerError(f"bad tag-table size {n_tags}")
         tags = [_StrTab.read(strtab, off) for off in tag_offs[:n_tags]]
@@ -252,9 +345,23 @@ def loads_many(data: bytes) -> List[Kernel]:
                 raise ContainerError(f"kernel {i}: label position {pos} past end")
             labels.append((_StrTab.read(strtab, noff), pos))
 
+        name = _StrTab.read(strtab, name_off)
+        if stored_crc is not None:
+            # per-kernel integrity, checked on the raw section bytes *before*
+            # any decoding work is spent on a corrupt kernel
+            recomputed = _content_crc(
+                name, threads, blocks, shared, demoted, reg_count, rda,
+                live_in_mask, live_out_mask, tags, labels, sections[text_sec][2],
+            )
+            if recomputed != stored_crc:
+                raise ContainerError(
+                    f"kernel {name}: per-kernel content CRC mismatch "
+                    f"(stored {stored_crc:#010x}, recomputed {recomputed:#010x})"
+                )
+
         items = encoding.decode_text(sections[text_sec][2], n_instrs, labels, tags)
         kernel = Kernel(
-            name=_StrTab.read(strtab, name_off),
+            name=name,
             items=items,
             threads_per_block=threads,
             num_blocks=blocks,
@@ -269,6 +376,10 @@ def loads_many(data: bytes) -> List[Kernel]:
                 f"kernel {kernel.name}: declared reg count {reg_count} != "
                 f"recomputed {kernel.reg_count}"
             )
+        if stored_crc is not None:
+            # hand the verified CRC to consumers (the translation cache keys
+            # on it) so they need not re-encode the kernel to recompute it
+            kernel.content_crc = stored_crc
         kernels.append(kernel)
     return kernels
 
@@ -286,12 +397,14 @@ def loads(data: bytes) -> Kernel:
 
 def kernel_names(data: bytes) -> List[str]:
     """Kernel names in the container, without decoding any text section."""
-    sections, n_kernels = _parse_sections(data)
+    sections, n_kernels, version = _parse_sections(data)
+    size = KINFO_SIZES[version]
     strtab = next(payload for _, kind, payload in sections if kind == SEC_STRTAB)
     kinfo = next((payload for _, kind, payload in sections if kind == SEC_KINFO), None)
-    if kinfo is None or len(kinfo) != n_kernels * KINFO_SIZE:
+    if kinfo is None or len(kinfo) != n_kernels * size:
         raise ContainerError("malformed .kinfo section")
+    kinfo_struct = _KINFO_BY_VERSION[version]
     return [
-        _StrTab.read(strtab, _KINFO.unpack_from(kinfo, i * KINFO_SIZE)[0])
+        _StrTab.read(strtab, kinfo_struct.unpack_from(kinfo, i * size)[0])
         for i in range(n_kernels)
     ]

@@ -36,7 +36,7 @@ from __future__ import annotations
 import struct
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core.isa import OPCODES, Ctrl, Instr, Label
+from repro.core.isa import OPCODES, Instr, Label
 
 from .ctrlwords import BUNDLE_GROUP, pack_stream, unpack_stream
 

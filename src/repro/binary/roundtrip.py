@@ -10,10 +10,12 @@ corpus.
 
 from __future__ import annotations
 
+from typing import Sequence
+
 from repro.core.isa import Kernel, equivalent
 from repro.core.sched import verify_schedule
 
-from .container import dumps, loads
+from .container import dumps, loads, loads_many
 
 
 class RoundTripError(AssertionError):
@@ -45,11 +47,47 @@ def verified_dumps(kernel: Kernel, check_semantics: bool = True) -> bytes:
     return blob
 
 
+def verified_dumps_many(
+    kernels: Sequence[Kernel], check_semantics: bool = True
+) -> bytes:
+    """Multi-kernel :func:`verified_dumps`: serialize the batch into one
+    container and prove the round trip is faithful for **every** kernel
+    (render identity, byte stability, schedule preservation, and optionally
+    dataflow equivalence); returns the verified container bytes."""
+    klist = list(kernels)
+    blob = dumps(klist)
+    decoded = loads_many(blob)
+    if len(decoded) != len(klist):
+        raise RoundTripError(
+            f"container holds {len(decoded)} kernels, expected {len(klist)}"
+        )
+    for kernel, dec in zip(klist, decoded):
+        _check_pair(kernel, dec, check_semantics)
+    if dumps(decoded) != blob:
+        raise RoundTripError("multi-kernel container bytes are not stable")
+    return blob
+
+
 def check_roundtrip(kernel: Kernel, check_semantics: bool = True) -> Kernel:
     """Assert the container round trip is faithful (see
     :func:`verified_dumps`); returns the decoded kernel."""
     blob = dumps(kernel)
     return _check_against(kernel, blob, check_semantics)
+
+
+def _check_pair(kernel: Kernel, decoded: Kernel, check_semantics: bool) -> None:
+    if decoded.render() != kernel.render():
+        raise RoundTripError(
+            f"{kernel.name}: decode(encode(k)) renders differently:\n"
+            f"--- original ---\n{kernel.render()}\n"
+            f"--- decoded ---\n{decoded.render()}"
+        )
+    if verify_schedule(decoded) != verify_schedule(kernel):
+        raise RoundTripError(
+            f"{kernel.name}: schedule violations changed across round trip"
+        )
+    if check_semantics and not equivalent(kernel, decoded):
+        raise RoundTripError(f"{kernel.name}: decoded kernel is not dataflow-equivalent")
 
 
 def _check_against(kernel: Kernel, blob: bytes, check_semantics: bool) -> Kernel:

@@ -8,10 +8,9 @@ explicit, with reasons — see DESIGN.md §Arch-applicability).
 
 from __future__ import annotations
 
-import dataclasses
 import importlib
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 from repro.models import ModelConfig
 

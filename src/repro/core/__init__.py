@@ -7,13 +7,18 @@ Faithful-reproduction layer:
 * :mod:`repro.core.sched`       control-word scheduler / verifier
 * :mod:`repro.core.kernelgen`   synthetic "nvcc" + Table-1 benchmark corpus
 * :mod:`repro.core.candidates`  §3.4.3 candidate strategies
-* :mod:`repro.core.regdem`      §3 demotion algorithm (Fig. 3)
+* :mod:`repro.core.spillspace`  where spilled words live (shared vs local)
+* :mod:`repro.core.passes`      the unified spill-transform pass pipeline
+* :mod:`repro.core.regdem`      §3 demotion algorithm (Fig. 3), as a
+                                 pipeline configuration
 * :mod:`repro.core.compaction`  §3.3 relocation space (Fig. 4)
 * :mod:`repro.core.postopt`     §3.4 post-spilling optimizations
-* :mod:`repro.core.variants`    §5.3 comparison variants (Table 3)
+* :mod:`repro.core.variants`    §5.3 comparison variants (Table 3), same
+                                 pipeline, different configurations
 * :mod:`repro.core.simulator`   cycle-approximate Maxwell timing model
 * :mod:`repro.core.predictor`   §4 compile-time performance predictor
-* :mod:`repro.core.translator`  pyReDe pipeline with self-checks
+* :mod:`repro.core.translator`  pyReDe driver: batch, cached, multi-kernel
+                                 binary-translation service
 
 Binary substrate (the pseudo-cubin layer the translator runs on; see
 README.md "Binary container format"):
@@ -32,8 +37,25 @@ TPU-adaptation layer (see DESIGN.md §2):
 
 from .isa import Instr, Kernel, Label, equivalent, parse_kernel
 from .occupancy import MAXWELL, Occupancy, occupancy, occupancy_of, spill_targets
+from .passes import (
+    Pass,
+    PassContext,
+    PassPipeline,
+    PassStat,
+    PassVerificationError,
+    aggressive_pipeline,
+    demotion_pipeline,
+)
 from .regdem import RegDemOptions, RegDemResult, auto_targets, demote
-from .translator import TranslationReport, translate, translate_binary
+from .spillspace import LocalSpace, SharedSpace, SpillSpace
+from .translator import (
+    BatchTranslationReport,
+    TranslationCache,
+    TranslationReport,
+    TranslationService,
+    translate,
+    translate_binary,
+)
 
 __all__ = [
     "Instr",
@@ -46,11 +68,24 @@ __all__ = [
     "occupancy",
     "occupancy_of",
     "spill_targets",
+    "Pass",
+    "PassContext",
+    "PassPipeline",
+    "PassStat",
+    "PassVerificationError",
+    "aggressive_pipeline",
+    "demotion_pipeline",
+    "LocalSpace",
+    "SharedSpace",
+    "SpillSpace",
     "RegDemOptions",
     "RegDemResult",
     "auto_targets",
     "demote",
+    "BatchTranslationReport",
+    "TranslationCache",
     "TranslationReport",
+    "TranslationService",
     "translate",
     "translate_binary",
 ]

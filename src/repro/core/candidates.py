@@ -15,7 +15,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Set, Tuple
 
-from .isa import CFG, RZ, Instr, Kernel
+from .isa import CFG, RZ, Kernel
 
 STRATEGIES = ("static", "cfg", "conflict")
 

@@ -18,9 +18,9 @@ priority).
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Set
 
-from .isa import RZ, Instr, Kernel, Label, reg_bank
+from .isa import Kernel, reg_bank
 from .candidates import width_map
 
 NUM_BANK_WINDOW = 4  # swapping window for the bank-aware variant (§3.4.1)

@@ -18,10 +18,10 @@ way ptxas would schedule them.
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List
 
-from .isa import RZ, Ctrl, Instr, Kernel, Label
+from .isa import Instr, Kernel, Label
 from .sched import schedule
 
 # Fixed low registers (the "ABI"):

@@ -1,0 +1,695 @@
+"""The unified spill-transform pass pipeline (paper §3 machinery).
+
+Every spilling flow in this repo — RegDem demotion (:func:`repro.core.
+regdem.demote`), the nvcc ``--maxrregcount`` model (:func:`repro.core.
+variants.aggressive`), the Hayes & Zhang local→shared conversion, and the
+pyReDe translator's variant enumeration — is one machine: reserve scratch
+registers, emit an addressing prologue, move register words into a
+:class:`~repro.core.spillspace.SpillSpace`, then clean up (redundancy
+elimination, compaction, substitution, rescheduling, stall fixup).  This
+module expresses that machine once:
+
+* :class:`Pass`          one named transformation over a :class:`PassContext`;
+* :class:`PassContext`   kernel + spill space + reserved registers +
+                         candidate queue + per-pass diagnostics/timings;
+* :class:`PassPipeline`  runs a pass schedule and, after **every** pass,
+                         the schedule verifier and the dataflow-equivalence
+                         oracle (``verify="each"``, the default) — a pipeline
+                         that corrupts a kernel mid-flight fails loudly at
+                         the exact pass that broke it.
+
+The concrete passes mirror the paper's transformation stack: prologue
+(§3.2), per-register demotion (Fig. 3), rematerialization (§5.3's nvcc
+model), redundancy elimination (§3.4.2 pass 1), compaction (§3.3),
+substitution (§3.4.2 pass 3), rescheduling (§3.4.2 pass 2), stall fixup.
+:func:`demotion_pipeline` and :func:`aggressive_pipeline` assemble the two
+schedules; ``demote()``/``aggressive()``/``make_variants()``/``translate()``
+are thin configurations of them.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from .candidates import make_candidates, operand_conflicts
+from .compaction import compact, packed_reg_count
+from .isa import (
+    GL_MEM_STALL,
+    NUM_BARRIERS,
+    NUM_REG_BANKS,
+    RZ,
+    SH_MEM_STALL,
+    Instr,
+    Kernel,
+    Label,
+    OpClass,
+    equivalent,
+)
+from .sched import fixup_stalls, repair_war, verify_schedule
+from .spillspace import SpillSpace
+
+#: Hard floor below which demotion gives no occupancy benefit (paper §3).
+REG_FLOOR = 32
+
+#: Process-wide pipeline execution counters (observability; the translation
+#: cache's acceptance test reads these to prove a cache hit ran zero passes).
+PIPELINE_COUNTERS = {"pipelines": 0, "passes": 0}
+
+
+class PassVerificationError(RuntimeError):
+    """A pipeline self-check failed: the named pass broke the kernel."""
+
+
+@dataclass
+class RegDemOptions:
+    """Optimization options (the paper's exhaustive-search dimensions)."""
+
+    candidate_strategy: str = "cfg"      # §3.4.3 (Fig. 8)
+    bank_avoid: bool = True              # §3.4.1 (Fig. 7)
+    elim_redundant: bool = True          # §3.4.2 pass 1 (Fig. 7)
+    reschedule: bool = True              # §3.4.2 pass 2 (Fig. 7)
+    substitute: bool = True              # §3.4.2 pass 3 (Fig. 7)
+
+    def label(self) -> str:
+        flags = "".join(
+            "1" if f else "0"
+            for f in (self.bank_avoid, self.elim_redundant, self.reschedule, self.substitute)
+        )
+        return f"{self.candidate_strategy}:{flags}"
+
+
+@dataclass
+class PassStat:
+    """One executed pass: wall time plus whatever the pass reported."""
+
+    name: str
+    seconds: float
+    stats: Dict[str, int] = field(default_factory=dict)
+
+    def describe(self) -> str:
+        body = " ".join(f"{k}={v}" for k, v in sorted(self.stats.items()))
+        return f"{self.name}: {self.seconds * 1e3:.2f}ms {body}".rstrip()
+
+
+class PassContext:
+    """Everything the passes share for one spilling run over one kernel.
+
+    The context owns a *copy* of the input kernel (``self.kernel``) and keeps
+    the untouched original (``self.original``) for the pipeline's
+    dataflow-equivalence self-check.
+    """
+
+    def __init__(
+        self,
+        kernel: Kernel,
+        space: SpillSpace,
+        options: Optional[RegDemOptions] = None,
+        target: int = REG_FLOOR,
+        floor: Optional[int] = None,
+        max_remat: Optional[int] = None,
+    ):
+        self.original = kernel
+        self.kernel = kernel.copy()
+        self.space = space
+        self.options = options or RegDemOptions()
+        self.target = target
+        #: register count at which spilling stops; RegDem clamps to
+        #: REG_FLOOR (no occupancy benefit below 32), the aggressive
+        #: allocator honours the raw target like nvcc does
+        self.floor = max(target, REG_FLOOR) if floor is None else floor
+        self.max_remat = max_remat
+
+        #: ordered demotion queue [(leading_reg, width)], pruned as passes run
+        self.candidates: List[Tuple[int, int]] = make_candidates(
+            self.kernel, self.options.candidate_strategy
+        )
+        self.conflicts: Dict[int, Set[int]] = operand_conflicts(self.kernel)
+
+        # reserved registers (filled by ReserveRegistersPass)
+        self.rdv: int = RZ          # demoted-value register
+        self.rda: int = RZ          # demoted-base-address register
+        self.rtmp: Optional[int] = None  # rematerialization temporary
+        self.wide: bool = False     # RDV is an even-aligned pair
+
+        # outcome accumulators
+        self.demoted: List[Tuple[int, int]] = []   # (original reg, width)
+        self.demoted_words: int = 0
+        self.remat: int = 0
+        self.rematted: Set[int] = set()
+
+        #: per-pass diagnostics/timings, in execution order
+        self.passes: List[PassStat] = []
+
+    def pass_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-pass stats keyed by pass name (last run wins on duplicates)."""
+        return {p.name: dict(p.stats) for p in self.passes}
+
+
+class Pass:
+    """One named, self-contained transformation over a :class:`PassContext`.
+
+    Subclasses set :attr:`name` and implement :meth:`run`, returning a stats
+    dict (or ``None``) that the pipeline records with the pass timing.
+    """
+
+    name: str = "pass"
+
+    def run(self, ctx: PassContext) -> Optional[Dict[str, int]]:
+        raise NotImplementedError
+
+
+class PassPipeline:
+    """A pass schedule with built-in self-checking.
+
+    ``verify`` policies:
+
+    * ``"each"``      (default) after every pass, run the schedule verifier
+                      and the dataflow-equivalence oracle against the
+                      original kernel — the paper's translator promise,
+                      enforced at pass granularity;
+    * ``"schedule"``  schedule verifier only after every pass (cheap);
+    * ``"final"``     both checks once, after the last pass;
+    * ``"none"``      no checks (callers own verification).
+    """
+
+    VERIFY_MODES = ("each", "schedule", "final", "none")
+
+    def __init__(self, passes: Sequence[Pass], verify: str = "each"):
+        if verify not in self.VERIFY_MODES:
+            raise ValueError(f"unknown verify mode {verify!r}; want one of {self.VERIFY_MODES}")
+        self.passes = list(passes)
+        self.verify = verify
+
+    def run(
+        self,
+        ctx: PassContext,
+        observer: Optional[Callable[[Pass, PassContext], None]] = None,
+    ) -> PassContext:
+        PIPELINE_COUNTERS["pipelines"] += 1
+        for p in self.passes:
+            t0 = time.perf_counter()
+            stats = p.run(ctx) or {}
+            ctx.passes.append(PassStat(p.name, time.perf_counter() - t0, stats))
+            PIPELINE_COUNTERS["passes"] += 1
+            if self.verify == "each":
+                self.check(ctx, p.name)
+            elif self.verify == "schedule":
+                self.check(ctx, p.name, semantics=False)
+            if observer is not None:
+                observer(p, ctx)
+        if self.verify == "final":
+            self.check(ctx, "final")
+        return ctx
+
+    @staticmethod
+    def check(ctx: PassContext, label: str, semantics: bool = True) -> None:
+        errs = verify_schedule(ctx.kernel)
+        if errs:
+            raise PassVerificationError(
+                f"{ctx.kernel.name}: schedule violations after pass "
+                f"'{label}': {errs[:3]}"
+            )
+        if semantics and not equivalent(ctx.original, ctx.kernel):
+            raise PassVerificationError(
+                f"{ctx.kernel.name}: dataflow mismatch vs original after "
+                f"pass '{label}'"
+            )
+
+
+# ---------------------------------------------------------------------------
+# Barrier tracker (Fig. 3, lines 32-53)
+# ---------------------------------------------------------------------------
+
+
+class BarrierTracker:
+    """Tracks which instruction last set each scoreboard barrier and the
+    stall cycles elapsed since, to hand out the least-costly barrier."""
+
+    def __init__(self) -> None:
+        self.slots: List[Optional[List]] = [None] * NUM_BARRIERS
+
+    def reset(self) -> None:
+        """Barriers cannot span basic blocks (cleared before jumps)."""
+        self.slots = [None] * NUM_BARRIERS
+
+    def get_barrier(self, setter: Instr) -> int:
+        """Fig. 3 ``GetBarrier``: a free barrier, else the one whose pending
+        latency is closest to already-elapsed (minimum residual stall).
+
+        When a busy barrier must be reused, the new setter first *waits* on
+        it — this is the "additional stalls" the paper describes, made
+        explicit so the schedule verifier and simulator see the true cost.
+        """
+        for b in range(NUM_BARRIERS):
+            if self.slots[b] is None:
+                self.slots[b] = [setter, 0]
+                return b
+        best_b, best_stall = None, GL_MEM_STALL + 1
+        for b in range(NUM_BARRIERS):
+            inst, elapsed = self.slots[b]
+            if inst.info.klass is OpClass.LSU_GLOBAL or inst.info.klass is OpClass.LSU_LOCAL:
+                residual = GL_MEM_STALL - elapsed
+            elif inst.info.klass is OpClass.LSU_SHARED:
+                residual = SH_MEM_STALL - elapsed
+            else:
+                residual = inst.info.klass.latency - elapsed
+            if residual < best_stall:
+                best_b, best_stall = b, residual
+        setter.ctrl.wait.add(best_b)
+        self.slots[best_b] = [setter, 0]
+        return best_b
+
+    def update(self, inst: Instr) -> None:
+        """Fig. 3 ``UpdateBarrierTracker`` (waits cleared before records so
+        that a forced reuse in :meth:`get_barrier` stays consistent)."""
+        for b in inst.ctrl.wait:
+            if self.slots[b] is not None and self.slots[b][0] is not inst:
+                self.slots[b] = None
+        if inst.ctrl.read_bar is not None:
+            self.slots[inst.ctrl.read_bar] = [inst, 0]
+        if inst.ctrl.write_bar is not None:
+            self.slots[inst.ctrl.write_bar] = [inst, 0]
+        for b in range(NUM_BARRIERS):
+            if self.slots[b] is not None and self.slots[b][0] is not inst:
+                self.slots[b][1] += inst.ctrl.stall
+
+
+# ---------------------------------------------------------------------------
+# RDV bank choice (§3.4.1, first strategy)
+# ---------------------------------------------------------------------------
+
+
+def choose_rdv_bank(kernel: Kernel, candidates: Sequence[Tuple[int, int]], wide: bool) -> int:
+    """Pick the register bank for RDV minimizing same-instruction conflicts.
+
+    For every instruction that touches a candidate register, count the source
+    operands (post-rename survivors) that would share RDV's bank.
+    """
+    cand_regs = {r for r, _ in candidates}
+    banks = [0, 2] if wide else [0, 1, 2, 3]
+    scores = {b: 0 for b in banks}
+    for ins in kernel.instructions():
+        touched = [r for r in ins.leading_regs() if r in cand_regs]
+        if not touched:
+            continue
+        others = [r for r in ins.src_words() if r not in cand_regs and r != RZ]
+        for b in banks:
+            scores[b] += sum(1 for r in others if r % 4 == b)
+    return min(banks, key=lambda b: (scores[b], b))
+
+
+# ---------------------------------------------------------------------------
+# The per-register demotion transform (Fig. 3 main loop body)
+# ---------------------------------------------------------------------------
+
+
+def demote_register(
+    k: Kernel,
+    r: int,
+    width: int,
+    offsets: List[int],
+    rdv: int,
+    rda: int,
+    space: SpillSpace,
+) -> None:
+    """Demote one register: walk the program, rename ``r`` -> RDV, insert
+    spill-space loads/stores with tracked barriers.
+
+    The :class:`~repro.core.spillspace.SpillSpace` supplies the opcodes:
+    shared space (``LDS``/``STS``, rda=tid*4) realizes RegDem's demotion;
+    local space (``LDL``/``STL``, rda=RZ) realizes nvcc-style local-memory
+    spilling for the comparison variants (§5.3)."""
+    tracker = BarrierTracker()
+    new_items: List[object] = []
+    #: waits to attach to the next real instruction (line 18-19 of Fig. 3)
+    pending_next_wait: Set[int] = set()
+    #: register word -> unresolved read barrier guarding it (a store still
+    #: holds the register as a source operand).  A new writer of the word —
+    #: e.g. an inserted demoted load clobbering RDV after a *user* store
+    #: whose address register was demoted — must wait on it (WAR).
+    pending_read: Dict[int, int] = {}
+    prev_real: Optional[Instr] = None
+
+    def append(ins_or_label) -> None:
+        nonlocal prev_real
+        new_items.append(ins_or_label)
+        if isinstance(ins_or_label, Instr):
+            nonlocal pending_next_wait
+            ins = ins_or_label
+            if pending_next_wait:
+                ins.ctrl.wait |= pending_next_wait
+                pending_next_wait = set()
+            # WAR guard against in-flight store reads
+            for rw in ins.dst_words():
+                if rw in pending_read:
+                    ins.ctrl.wait.add(pending_read.pop(rw))
+            for b in ins.ctrl.wait:
+                for rw in [r for r, bb in pending_read.items() if bb == b]:
+                    del pending_read[rw]
+            if ins.ctrl.read_bar is not None:
+                for rw in ins.src_words():
+                    if rw != RZ:
+                        pending_read[rw] = ins.ctrl.read_bar
+            tracker.update(ins)
+            prev_real = ins
+
+    for it in k.items:
+        if isinstance(it, Label):
+            tracker.reset()
+            pending_read.clear()
+            new_items.append(it)
+            continue
+        ins: Instr = it
+        if ins.info.is_branch:
+            tracker.reset()
+            pending_read.clear()
+        if r not in ins.leading_regs():
+            append(ins)
+            continue
+
+        is_dst = r in ins.dsts
+        is_src = r in ins.srcs
+        ins.rename(r, rdv)
+
+        # ---- read access: LDS RDV, [RDA+offset] before inst (lines 20-29) --
+        if is_src:
+            for j in range(width):
+                lds = Instr(
+                    space.load_op,
+                    [rdv + j],
+                    [rda],
+                    offset=offsets[j],
+                    pred=ins.pred,
+                    pred_neg=ins.pred_neg,
+                    tag="demoted_load",
+                )
+                lds.ctrl.read_bar = tracker.get_barrier(lds)
+                lds.ctrl.write_bar = tracker.get_barrier(lds)
+                ins.ctrl.wait.add(lds.ctrl.read_bar)
+                ins.ctrl.wait.add(lds.ctrl.write_bar)
+                if (
+                    prev_real is not None
+                    and prev_real.tag == "demoted_store"
+                    and prev_real.ctrl.read_bar is not None
+                ):
+                    # RDV must be free before the demoted register is loaded
+                    lds.ctrl.wait.add(prev_real.ctrl.read_bar)
+                append(lds)
+        append(ins)
+
+        # ---- write access: STS [RDA+offset], RDV after inst (lines 11-19) --
+        if is_dst:
+            for j in range(width):
+                sts = Instr(
+                    space.store_op,
+                    srcs=[rda, rdv + j],
+                    offset=offsets[j],
+                    pred=ins.pred,
+                    pred_neg=ins.pred_neg,
+                    tag="demoted_store",
+                )
+                if ins.info.needs_write_barrier and ins.ctrl.write_bar is None:
+                    ins.ctrl.write_bar = tracker.get_barrier(ins)
+                if ins.ctrl.write_bar is not None:
+                    sts.ctrl.wait.add(ins.ctrl.write_bar)
+                sts.ctrl.read_bar = tracker.get_barrier(sts)
+                append(sts)
+                # the *next* instruction must wait for RDV to be read back out
+                # (Fig. 3 lines 18-19) — recorded after append so the store
+                # does not wait on its own barrier
+                pending_next_wait.add(sts.ctrl.read_bar)
+
+    # drain: if the stream ended with a pending wait, park it on the last
+    # real instruction (kernels end in EXIT, so this is the normal path)
+    if pending_next_wait and prev_real is not None:
+        prev_real.ctrl.wait |= pending_next_wait
+    k.items = new_items
+
+
+# ---------------------------------------------------------------------------
+# Rematerialization helpers (the nvcc --maxrregcount model, §5.3)
+# ---------------------------------------------------------------------------
+
+
+def _const_defs(kernel: Kernel) -> Dict[int, float]:
+    """Registers defined exactly once, by a ``MOV32I`` (rematerializable)."""
+    defs: Dict[int, List[Instr]] = {}
+    for ins in kernel.instructions():
+        for r in ins.dsts:
+            defs.setdefault(r, []).append(ins)
+    out: Dict[int, float] = {}
+    for r, instrs in defs.items():
+        if len(instrs) == 1 and instrs[0].op == "MOV32I" and instrs[0].pred is None:
+            out[r] = instrs[0].imm or 0.0
+    return out
+
+
+def _remat_one(kernel: Kernel, r: int, value: float, tmp: int) -> None:
+    """Remove ``r``'s constant definition; recompute into ``tmp`` before each
+    use ("less efficient instruction sequences", paper §1)."""
+    new_items: List[object] = []
+    for it in kernel.items:
+        if isinstance(it, Label):
+            new_items.append(it)
+            continue
+        ins: Instr = it
+        if ins.op == "MOV32I" and ins.dsts == [r]:
+            continue  # drop the definition
+        if r in ins.srcs:
+            mov = Instr(
+                "MOV32I",
+                [tmp],
+                imm=value,
+                pred=ins.pred,
+                pred_neg=ins.pred_neg,
+                tag="remat",
+            )
+            new_items.append(mov)
+            ins.srcs = [tmp if s == r else s for s in ins.srcs]
+        new_items.append(ins)
+    kernel.items = new_items
+
+
+# ---------------------------------------------------------------------------
+# Concrete passes (the paper's transformation stack)
+# ---------------------------------------------------------------------------
+
+
+class ReserveRegistersPass(Pass):
+    """Reserve RDV (+ alias for pair demotion), the optional remat temporary,
+    and RDA when the spill space needs a base register — "at least two
+    registers must be added" (§3.2)."""
+
+    name = "reserve"
+
+    def __init__(self, bank_tune: bool = False, remat_temp: bool = False):
+        self.bank_tune = bank_tune      # §3.4.1 RDV bank choice
+        self.remat_temp = remat_temp    # distinct temp for rematerialization
+
+    def run(self, ctx: PassContext) -> Dict[str, int]:
+        k = ctx.kernel
+        wide = any(w == 2 for _, w in ctx.candidates)
+        base = k.reg_count
+        if wide and base % 2:
+            base += 1  # RDV must be even-numbered for pair demotion (§3.2)
+        if self.bank_tune and ctx.options.bank_avoid:
+            want_bank = choose_rdv_bank(k, ctx.candidates, wide)
+            rdv = base
+            step = 2 if wide else 1
+            while rdv % NUM_REG_BANKS != want_bank:
+                rdv += step
+        else:
+            rdv = base
+        nxt = rdv + (2 if wide else 1)
+        if self.remat_temp:
+            # one instruction may need both a reloaded spill and a recomputed
+            # constant simultaneously
+            ctx.rtmp = nxt
+            nxt += 1
+        if ctx.space.needs_base:
+            ctx.rda = nxt
+            k.rda = nxt
+        else:
+            ctx.rda = RZ
+        ctx.rdv = rdv
+        ctx.wide = wide
+        return {"rdv": rdv, "rda": ctx.rda, "wide": int(wide)}
+
+
+class ProloguePass(Pass):
+    """Base-address setup at kernel entry (§3.2: RDA = tid*4 for shared
+    space); a no-op for spaces without a base register."""
+
+    name = "prologue"
+
+    def run(self, ctx: PassContext) -> Dict[str, int]:
+        return {"inserted": ctx.space.emit_prologue(ctx)}
+
+
+class RematerializationPass(Pass):
+    """nvcc's documented preference: recompute single-def constants instead
+    of spilling, trading dynamic instructions for register pressure (§5.3).
+    Two rematerialized values in one instruction would need two temps, so
+    conflicting candidates are skipped (same rule as demotion conflicts)."""
+
+    name = "rematerialize"
+
+    def run(self, ctx: PassContext) -> Dict[str, int]:
+        k = ctx.kernel
+        consts = _const_defs(k)
+        done = 0
+        for r, width in list(ctx.candidates):
+            if packed_reg_count(k) <= ctx.floor:
+                break
+            if width != 1 or r not in consts:
+                continue
+            if ctx.max_remat is not None and ctx.remat + done >= ctx.max_remat:
+                break
+            if ctx.conflicts.get(r, set()) & ctx.rematted:
+                continue
+            _remat_one(k, r, consts[r], ctx.rtmp)
+            done += 1
+            ctx.rematted.add(r)
+            ctx.candidates = [(v, w) for v, w in ctx.candidates if v != r]
+        war_added = repair_war(k)
+        ctx.remat += done
+        return {"rematerialized": done, "war_waits_added": war_added}
+
+
+class DemotionPass(Pass):
+    """The Fig. 3 main loop: demote candidates one at a time until the
+    register floor is reached, pruning operand conflicts (§3.1 challenge 2)
+    after every demoted register."""
+
+    name = "demote"
+
+    def run(self, ctx: PassContext) -> Dict[str, int]:
+        k = ctx.kernel
+        regs = words = pruned = 0
+        while ctx.candidates:
+            if packed_reg_count(k) <= ctx.floor:
+                break
+            r, width = ctx.candidates.pop(0)
+            offsets = ctx.space.offsets(ctx, width)
+            demote_register(k, r, width, offsets, ctx.rdv, ctx.rda, ctx.space)
+            ctx.demoted.append((r, width))
+            ctx.demoted_words += width
+            ctx.space.account(ctx)
+            regs += 1
+            words += width
+            bad = ctx.conflicts.get(r, set())
+            before = len(ctx.candidates)
+            ctx.candidates = [(c, w) for c, w in ctx.candidates if c not in bad]
+            pruned += before - len(ctx.candidates)
+        return {"demoted_regs": regs, "demoted_words": words, "conflicts_pruned": pruned}
+
+
+class RedundancyEliminationPass(Pass):
+    """§3.4.2 pass 1: drop provably redundant demoted loads/stores."""
+
+    name = "eliminate_redundant"
+
+    def run(self, ctx: PassContext) -> Dict[str, int]:
+        from . import postopt
+
+        return {"removed": postopt.eliminate_redundant(ctx.kernel, ctx.rdv)}
+
+
+class CompactionPass(Pass):
+    """§3.3: pack the register space through the relocation space, then
+    re-aim RDV/RDA at their post-compaction homes."""
+
+    name = "compact"
+
+    def __init__(self, bank_avoid: Optional[bool] = None):
+        #: None = follow ctx.options.bank_avoid (the §3.4.1 variant)
+        self.bank_avoid = bank_avoid
+
+    def run(self, ctx: PassContext) -> Dict[str, int]:
+        k = ctx.kernel
+        bank = ctx.options.bank_avoid if self.bank_avoid is None else self.bank_avoid
+        moves = compact(k, bank_avoid=bank)
+        ctx.rdv = moves.get(ctx.rdv, ctx.rdv)
+        ctx.rda = k.rda if k.rda is not None else ctx.rda
+        return {"moved": len(moves), "reg_count": k.reg_count}
+
+
+class SubstitutionPass(Pass):
+    """§3.4.2 pass 3: give distinct demoted-access spans distinct free
+    registers so several demoted values can be in flight simultaneously."""
+
+    name = "substitute"
+
+    def run(self, ctx: PassContext) -> Dict[str, int]:
+        from . import postopt
+
+        renamed = postopt.substitute_value_register(
+            ctx.kernel, ctx.rdv, ctx.kernel.reg_count
+        )
+        return {"renamed_spans": renamed}
+
+
+class ReschedulePass(Pass):
+    """§3.4.2 pass 2: hoist demoted loads earlier and relax demoted-store
+    read barriers where provably safe."""
+
+    name = "reschedule"
+
+    def run(self, ctx: PassContext) -> Dict[str, int]:
+        from . import postopt
+
+        return {"moved": postopt.reschedule(ctx.kernel, ctx.rdv, ctx.rda)}
+
+
+class StallFixupPass(Pass):
+    """Recompute stall counts for the transformed stream, keeping the
+    barrier assignments the demotion machinery placed."""
+
+    name = "fixup_stalls"
+
+    def run(self, ctx: PassContext) -> None:
+        fixup_stalls(ctx.kernel)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline configurations
+# ---------------------------------------------------------------------------
+
+
+def demotion_pipeline(options: Optional[RegDemOptions] = None, verify: str = "each") -> PassPipeline:
+    """RegDem's §3 schedule: prologue → demotion → redundancy elimination →
+    compaction → substitution → rescheduling → stall fixup, with the
+    optional passes gated by ``options``."""
+    options = options or RegDemOptions()
+    passes: List[Pass] = [
+        ReserveRegistersPass(bank_tune=True),
+        ProloguePass(),
+        DemotionPass(),
+    ]
+    if options.elim_redundant:
+        passes.append(RedundancyEliminationPass())
+    passes.append(CompactionPass())
+    if options.substitute:
+        passes.append(SubstitutionPass())
+    if options.reschedule:
+        passes.append(ReschedulePass())
+    passes.append(StallFixupPass())
+    return PassPipeline(passes, verify=verify)
+
+
+def aggressive_pipeline(verify: str = "each") -> PassPipeline:
+    """The nvcc ``--maxrregcount`` model (§5.3): rematerialize first, spill
+    the remainder, compact without bank tuning, fix up stalls."""
+    return PassPipeline(
+        [
+            ReserveRegistersPass(bank_tune=False, remat_temp=True),
+            ProloguePass(),
+            RematerializationPass(),
+            DemotionPass(),
+            CompactionPass(bank_avoid=False),
+            StallFixupPass(),
+        ],
+        verify=verify,
+    )

@@ -17,7 +17,7 @@ All passes maintain the barrier-consistency invariant checked by
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Set
 
 from .isa import RZ, Instr, Kernel, Label, liveness
 from .sched import fixup_stalls

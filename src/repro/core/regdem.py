@@ -16,51 +16,32 @@ registers to shared memory one at a time:
 Shared-memory layout (eq. 1): the r-th demoted word of thread ``t`` lives at
 ``t*4 + s + r*n*4`` (``s`` = static allocation rounded to bank alignment,
 ``n`` = threads/block), which is bank-conflict-free by construction.
+
+:func:`demote` is a thin configuration of the unified pass pipeline
+(:mod:`repro.core.passes`): it binds a :class:`~repro.core.spillspace.
+SharedSpace` to :func:`repro.core.passes.demotion_pipeline` and packages the
+pipeline outcome as a :class:`RegDemResult`.  The demotion machinery itself
+(barrier tracker, per-register transform, pass implementations) lives in
+:mod:`repro.core.passes`, shared with the §5.3 comparison variants.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import List, Optional, Tuple
 
-from .candidates import make_candidates, operand_conflicts, width_map
-from .compaction import compact, packed_reg_count
-from .isa import (
-    GL_MEM_STALL,
-    NUM_BARRIERS,
-    NUM_REG_BANKS,
-    RZ,
-    SH_MEM_STALL,
-    Ctrl,
-    Instr,
-    Kernel,
-    Label,
-    OpClass,
+from .isa import Kernel
+from .passes import (  # noqa: F401  (re-exported: historical home of these names)
+    REG_FLOOR,
+    BarrierTracker,
+    PassContext,
+    PassStat,
+    RegDemOptions,
+    choose_rdv_bank,
+    demote_register,
+    demotion_pipeline,
 )
-from .sched import fixup_stalls
-
-#: Hard floor below which demotion gives no occupancy benefit (paper §3).
-REG_FLOOR = 32
-#: Maxwell per-block shared memory limit.
-SMEM_LIMIT = 48 * 1024
-
-
-@dataclass
-class RegDemOptions:
-    """Optimization options (the paper's exhaustive-search dimensions)."""
-
-    candidate_strategy: str = "cfg"      # §3.4.3 (Fig. 8)
-    bank_avoid: bool = True              # §3.4.1 (Fig. 7)
-    elim_redundant: bool = True          # §3.4.2 pass 1 (Fig. 7)
-    reschedule: bool = True              # §3.4.2 pass 2 (Fig. 7)
-    substitute: bool = True              # §3.4.2 pass 3 (Fig. 7)
-
-    def label(self) -> str:
-        flags = "".join(
-            "1" if f else "0"
-            for f in (self.bank_avoid, self.elim_redundant, self.reschedule, self.substitute)
-        )
-        return f"{self.candidate_strategy}:{flags}"
+from .spillspace import SMEM_LIMIT, SharedSpace  # noqa: F401  (re-exported)
 
 
 @dataclass
@@ -73,6 +54,8 @@ class RegDemResult:
     target: int
     options: RegDemOptions
     reached_target: bool
+    #: per-pass diagnostics/timings from the pipeline run, in order
+    passes: List[PassStat] = field(default_factory=list)
     _rdv_wide: bool = False
 
     @property
@@ -81,305 +64,39 @@ class RegDemResult:
         Spilled / RegDem")."""
         return self.demoted_words
 
-
-# ---------------------------------------------------------------------------
-# Barrier tracker (Fig. 3, lines 32-53)
-# ---------------------------------------------------------------------------
-
-
-class BarrierTracker:
-    """Tracks which instruction last set each scoreboard barrier and the
-    stall cycles elapsed since, to hand out the least-costly barrier."""
-
-    def __init__(self) -> None:
-        self.slots: List[Optional[List]] = [None] * NUM_BARRIERS
-
-    def reset(self) -> None:
-        """Barriers cannot span basic blocks (cleared before jumps)."""
-        self.slots = [None] * NUM_BARRIERS
-
-    def get_barrier(self, setter: Instr) -> int:
-        """Fig. 3 ``GetBarrier``: a free barrier, else the one whose pending
-        latency is closest to already-elapsed (minimum residual stall).
-
-        When a busy barrier must be reused, the new setter first *waits* on
-        it — this is the "additional stalls" the paper describes, made
-        explicit so the schedule verifier and simulator see the true cost.
-        """
-        for b in range(NUM_BARRIERS):
-            if self.slots[b] is None:
-                self.slots[b] = [setter, 0]
-                return b
-        best_b, best_stall = None, GL_MEM_STALL + 1
-        for b in range(NUM_BARRIERS):
-            inst, elapsed = self.slots[b]
-            if inst.info.klass is OpClass.LSU_GLOBAL or inst.info.klass is OpClass.LSU_LOCAL:
-                residual = GL_MEM_STALL - elapsed
-            elif inst.info.klass is OpClass.LSU_SHARED:
-                residual = SH_MEM_STALL - elapsed
-            else:
-                residual = inst.info.klass.latency - elapsed
-            if residual < best_stall:
-                best_b, best_stall = b, residual
-        setter.ctrl.wait.add(best_b)
-        self.slots[best_b] = [setter, 0]
-        return best_b
-
-    def update(self, inst: Instr) -> None:
-        """Fig. 3 ``UpdateBarrierTracker`` (waits cleared before records so
-        that a forced reuse in :meth:`get_barrier` stays consistent)."""
-        for b in inst.ctrl.wait:
-            if self.slots[b] is not None and self.slots[b][0] is not inst:
-                self.slots[b] = None
-        if inst.ctrl.read_bar is not None:
-            self.slots[inst.ctrl.read_bar] = [inst, 0]
-        if inst.ctrl.write_bar is not None:
-            self.slots[inst.ctrl.write_bar] = [inst, 0]
-        for b in range(NUM_BARRIERS):
-            if self.slots[b] is not None and self.slots[b][0] is not inst:
-                self.slots[b][1] += inst.ctrl.stall
-
-
-# ---------------------------------------------------------------------------
-# RDV bank choice (§3.4.1, first strategy)
-# ---------------------------------------------------------------------------
-
-
-def choose_rdv_bank(kernel: Kernel, candidates: Sequence[Tuple[int, int]], wide: bool) -> int:
-    """Pick the register bank for RDV minimizing same-instruction conflicts.
-
-    For every instruction that touches a candidate register, count the source
-    operands (post-rename survivors) that would share RDV's bank.
-    """
-    cand_regs = {r for r, _ in candidates}
-    banks = [0, 2] if wide else [0, 1, 2, 3]
-    scores = {b: 0 for b in banks}
-    for ins in kernel.instructions():
-        touched = [r for r in ins.leading_regs() if r in cand_regs]
-        if not touched:
-            continue
-        others = [r for r in ins.src_words() if r not in cand_regs and r != RZ]
-        for b in banks:
-            scores[b] += sum(1 for r in others if r % 4 == b)
-    return min(banks, key=lambda b: (scores[b], b))
-
-
-# ---------------------------------------------------------------------------
-# The demotion transformation
-# ---------------------------------------------------------------------------
-
-
-def _round4(x: int) -> int:
-    return (x + 3) // 4 * 4
+    def pass_stats(self) -> dict:
+        """Per-pass stats keyed by pass name."""
+        return {p.name: dict(p.stats) for p in self.passes}
 
 
 def demote(
     kernel: Kernel,
     target_regs: int,
     options: Optional[RegDemOptions] = None,
+    verify: str = "each",
 ) -> RegDemResult:
-    """Run RegDem on ``kernel`` toward ``target_regs``; returns a new kernel."""
-    from . import postopt  # local import: postopt imports nothing from here
+    """Run RegDem on ``kernel`` toward ``target_regs``; returns a new kernel.
 
+    ``verify`` is the pipeline self-check policy (see
+    :class:`repro.core.passes.PassPipeline`); the default proves schedule
+    validity and dataflow equivalence after every pass.
+    """
     options = options or RegDemOptions()
-    k = kernel.copy()
-    n = k.threads_per_block
-    s_up = _round4(k.shared_size)
-
-    candidates = make_candidates(k, options.candidate_strategy)
-    conflicts = operand_conflicts(k)
-
-    # ---- reserve RDV (+ alias if any pair candidates) and RDA --------------
-    wide = any(w == 2 for _, w in candidates)
-    base = k.reg_count
-    if wide and base % 2:
-        base += 1  # RDV must be even-numbered for pair demotion (§3.2)
-    if options.bank_avoid:
-        want_bank = choose_rdv_bank(k, candidates, wide)
-        rdv = base
-        step = 2 if wide else 1
-        while rdv % NUM_REG_BANKS != want_bank:
-            rdv += step
-    else:
-        rdv = base
-    rda = rdv + (2 if wide else 1)
-    k.rda = rda
-
-    # ---- prologue: RDA = tid * 4 (eq. 1 base address) -----------------------
-    s2r = Instr("S2R", [rdv], ctrl=Ctrl(stall=1))
-    shl = Instr("SHL", [rda], [rdv], imm=2.0, ctrl=Ctrl(stall=1))
-    tracker = BarrierTracker()
-    s2r.ctrl.write_bar = tracker.get_barrier(s2r)
-    shl.ctrl.wait.add(s2r.ctrl.write_bar)
-    k.items[:0] = [s2r, shl]
-
-    demoted: List[Tuple[int, int]] = []
-    demoted_words = 0
-
-    while candidates:
-        eff = packed_reg_count(k)
-        if eff <= max(target_regs, REG_FLOOR):
-            break
-        r, width = candidates.pop(0)
-        offsets = [s_up + (demoted_words + j) * n * 4 for j in range(width)]
-        _demote_one(k, r, width, offsets, rdv, rda)
-        demoted.append((r, width))
-        demoted_words += width
-        k.demoted_size = demoted_words * n * 4
-        if k.total_shared > SMEM_LIMIT:
-            raise ValueError(f"{k.name}: demotion exceeds shared memory limit")
-        # prune operand conflicts (§3.1 challenge 2)
-        bad = conflicts.get(r, set())
-        candidates = [(c, w) for c, w in candidates if c not in bad]
-
-    # ---- redundancy elimination, compaction (§3.3), then the schedule-level
-    # post-spilling optimizations (§3.4.2) on the packed register space ------
-    if options.elim_redundant:
-        postopt.eliminate_redundant(k, rdv)
-    moves = compact(k, bank_avoid=options.bank_avoid)
-    rdv = moves.get(rdv, rdv)
-    rda = k.rda if k.rda is not None else rda
-    if options.substitute:
-        postopt.substitute_value_register(k, rdv, k.reg_count)
-    if options.reschedule:
-        postopt.reschedule(k, rdv, rda)
-    fixup_stalls(k)
-
+    ctx = PassContext(kernel, SharedSpace(), options, target=target_regs)
+    demotion_pipeline(options, verify=verify).run(ctx)
     res = RegDemResult(
-        kernel=k,
-        demoted=demoted,
-        demoted_words=demoted_words,
-        rdv=rdv,
-        rda=rda,
+        kernel=ctx.kernel,
+        demoted=ctx.demoted,
+        demoted_words=ctx.demoted_words,
+        rdv=ctx.rdv,
+        rda=ctx.rda,
         target=target_regs,
         options=options,
-        reached_target=k.reg_count <= max(target_regs, REG_FLOOR),
+        reached_target=ctx.kernel.reg_count <= ctx.floor,
+        passes=ctx.passes,
     )
-    res._rdv_wide = wide
+    res._rdv_wide = ctx.wide
     return res
-
-
-def _demote_one(
-    k: Kernel,
-    r: int,
-    width: int,
-    offsets: List[int],
-    rdv: int,
-    rda: int,
-    load_op: str = "LDS",
-    store_op: str = "STS",
-) -> None:
-    """Demote one register (Fig. 3 main loop body): walk the program,
-    rename ``r`` -> RDV, insert demoted loads/stores with tracked barriers.
-
-    Parameterized over the spill space: (``LDS``/``STS``, rda=tid*4) realizes
-    RegDem's shared-memory demotion; (``LDL``/``STL``, rda=RZ) realizes
-    nvcc-style local-memory spilling for the comparison variants (§5.3)."""
-    tracker = BarrierTracker()
-    new_items: List[object] = []
-    #: waits to attach to the next real instruction (line 18-19 of Fig. 3)
-    pending_next_wait: Set[int] = set()
-    #: register word -> unresolved read barrier guarding it (a store still
-    #: holds the register as a source operand).  A new writer of the word —
-    #: e.g. an inserted demoted load clobbering RDV after a *user* store
-    #: whose address register was demoted — must wait on it (WAR).
-    pending_read: Dict[int, int] = {}
-    prev_real: Optional[Instr] = None
-
-    def append(ins_or_label) -> None:
-        nonlocal prev_real
-        new_items.append(ins_or_label)
-        if isinstance(ins_or_label, Instr):
-            nonlocal pending_next_wait
-            ins = ins_or_label
-            if pending_next_wait:
-                ins.ctrl.wait |= pending_next_wait
-                pending_next_wait = set()
-            # WAR guard against in-flight store reads
-            for rw in ins.dst_words():
-                if rw in pending_read:
-                    ins.ctrl.wait.add(pending_read.pop(rw))
-            for b in ins.ctrl.wait:
-                for rw in [r for r, bb in pending_read.items() if bb == b]:
-                    del pending_read[rw]
-            if ins.ctrl.read_bar is not None:
-                for rw in ins.src_words():
-                    if rw != RZ:
-                        pending_read[rw] = ins.ctrl.read_bar
-            tracker.update(ins)
-            prev_real = ins
-
-    for it in k.items:
-        if isinstance(it, Label):
-            tracker.reset()
-            pending_read.clear()
-            new_items.append(it)
-            continue
-        ins: Instr = it
-        if ins.info.is_branch:
-            tracker.reset()
-            pending_read.clear()
-        if r not in ins.leading_regs():
-            append(ins)
-            continue
-
-        is_dst = r in ins.dsts
-        is_src = r in ins.srcs
-        ins.rename(r, rdv)
-
-        # ---- read access: LDS RDV, [RDA+offset] before inst (lines 20-29) --
-        if is_src:
-            for j in range(width):
-                lds = Instr(
-                    load_op,
-                    [rdv + j],
-                    [rda],
-                    offset=offsets[j],
-                    pred=ins.pred,
-                    pred_neg=ins.pred_neg,
-                    tag="demoted_load",
-                )
-                lds.ctrl.read_bar = tracker.get_barrier(lds)
-                lds.ctrl.write_bar = tracker.get_barrier(lds)
-                ins.ctrl.wait.add(lds.ctrl.read_bar)
-                ins.ctrl.wait.add(lds.ctrl.write_bar)
-                if (
-                    prev_real is not None
-                    and prev_real.tag == "demoted_store"
-                    and prev_real.ctrl.read_bar is not None
-                ):
-                    # RDV must be free before the demoted register is loaded
-                    lds.ctrl.wait.add(prev_real.ctrl.read_bar)
-                append(lds)
-        append(ins)
-
-        # ---- write access: STS [RDA+offset], RDV after inst (lines 11-19) --
-        if is_dst:
-            for j in range(width):
-                sts = Instr(
-                    store_op,
-                    srcs=[rda, rdv + j],
-                    offset=offsets[j],
-                    pred=ins.pred,
-                    pred_neg=ins.pred_neg,
-                    tag="demoted_store",
-                )
-                if ins.info.needs_write_barrier and ins.ctrl.write_bar is None:
-                    ins.ctrl.write_bar = tracker.get_barrier(ins)
-                if ins.ctrl.write_bar is not None:
-                    sts.ctrl.wait.add(ins.ctrl.write_bar)
-                sts.ctrl.read_bar = tracker.get_barrier(sts)
-                append(sts)
-                # the *next* instruction must wait for RDV to be read back out
-                # (Fig. 3 lines 18-19) — recorded after append so the store
-                # does not wait on its own barrier
-                pending_next_wait.add(sts.ctrl.read_bar)
-
-    # drain: if the stream ended with a pending wait, park it on the last
-    # real instruction (kernels end in EXIT, so this is the normal path)
-    if pending_next_wait and prev_real is not None:
-        prev_real.ctrl.wait |= pending_next_wait
-    k.items = new_items
 
 
 # ---------------------------------------------------------------------------

@@ -34,18 +34,9 @@ Scheduling model (per basic block, matching the simulator):
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Set
 
-from .isa import (
-    NUM_BARRIERS,
-    RZ,
-    CFG,
-    Ctrl,
-    Instr,
-    Kernel,
-    Label,
-    OpClass,
-)
+from .isa import NUM_BARRIERS, RZ, Ctrl, Instr, Kernel, Label, OpClass
 
 #: Fixed producer->consumer latency for pipelined (non-barrier) ops.
 ALU_LATENCY = 6

@@ -26,8 +26,8 @@ mirroring how the paper reports Fig. 6.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List
 
 from .isa import Instr, Kernel, Label, NUM_BARRIERS, OpClass
 from .occupancy import MAXWELL, Occupancy, SMConfig, occupancy_of

@@ -1,0 +1,124 @@
+"""Spill spaces: where demoted/spilled register words live.
+
+The paper's transformation stack is parameterized over *where* a spilled
+word goes.  RegDem demotes to **shared memory** (eq. 1 layout, ``LDS``/
+``STS``, a per-thread base register computed in a prologue); the nvcc
+``--maxrregcount`` comparison variants spill to off-chip **local memory**
+(``LDL``/``STL``, thread-indexed by the hardware, no base register).  Both
+also underlie the research alternatives the §5.3 variants model.
+
+:class:`SpillSpace` captures that choice as one object handed to the pass
+pipeline (:mod:`repro.core.passes`) instead of the ``load_op``/``store_op``/
+``rda`` parameter plumbing that used to thread through the demotion loop:
+
+* :class:`SharedSpace` — RegDem's bank-conflict-free shared-memory layout
+  (eq. 1): the r-th demoted word of thread ``t`` lives at
+  ``t*4 + s + r*n*4`` (``s`` = static allocation rounded up to word
+  alignment, ``n`` = threads/block).  Needs a base register (RDA = tid*4)
+  and accounts every spilled word against the 48 KiB Maxwell limit.
+* :class:`LocalSpace` — nvcc-style local-memory spill slots at
+  ``r*4``; the hardware scales by thread, so no base register and no
+  shared-memory accounting.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, List
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (typing only)
+    from .passes import PassContext
+
+#: Maxwell per-block shared memory limit (bytes).
+SMEM_LIMIT = 48 * 1024
+
+
+def _round4(x: int) -> int:
+    return (x + 3) // 4 * 4
+
+
+class SpillSpace:
+    """Where spilled register words live: opcodes, addressing, accounting."""
+
+    #: human-readable space name (diagnostics / pass stats)
+    name: str = "abstract"
+    #: opcode loading one spilled word back into the value register
+    load_op: str = "LD?"
+    #: opcode storing the value register out to the spill slot
+    store_op: str = "ST?"
+    #: whether demoted addressing needs a reserved base register (RDA)
+    needs_base: bool = False
+
+    def offsets(self, ctx: "PassContext", width: int) -> List[int]:
+        """Byte offsets of the next ``width`` spill slots (the next demoted
+        word index is ``ctx.demoted_words``)."""
+        raise NotImplementedError
+
+    def emit_prologue(self, ctx: "PassContext") -> int:
+        """Emit base-address setup at kernel entry; returns #instructions
+        inserted.  Default: the space needs no prologue."""
+        return 0
+
+    def account(self, ctx: "PassContext") -> None:
+        """Update per-kernel bookkeeping after a register was spilled."""
+
+
+class SharedSpace(SpillSpace):
+    """RegDem's demoted-register space in unused shared memory (eq. 1)."""
+
+    name = "shared"
+    load_op = "LDS"
+    store_op = "STS"
+    needs_base = True
+
+    def __init__(self, check_limit: bool = True):
+        #: raise when demotion would exceed the hardware shared-memory limit
+        #: (RegDem refuses; the Hayes & Zhang conversion variants historically
+        #: did not guard, so the comparison pipeline disables the check)
+        self.check_limit = check_limit
+
+    def offsets(self, ctx: "PassContext", width: int) -> List[int]:
+        n = ctx.kernel.threads_per_block
+        s_up = _round4(ctx.kernel.shared_size)
+        return [s_up + (ctx.demoted_words + j) * n * 4 for j in range(width)]
+
+    def emit_prologue(self, ctx: "PassContext") -> int:
+        # RDA = tid * 4 (eq. 1 base address), barriers via the tracker
+        from .isa import Ctrl, Instr
+        from .passes import BarrierTracker
+
+        s2r = Instr("S2R", [ctx.rdv], ctrl=Ctrl(stall=1))
+        shl = Instr("SHL", [ctx.rda], [ctx.rdv], imm=2.0, ctrl=Ctrl(stall=1))
+        tracker = BarrierTracker()
+        s2r.ctrl.write_bar = tracker.get_barrier(s2r)
+        shl.ctrl.wait.add(s2r.ctrl.write_bar)
+        ctx.kernel.items[:0] = [s2r, shl]
+        return 2
+
+    def account(self, ctx: "PassContext") -> None:
+        k = ctx.kernel
+        k.demoted_size = ctx.demoted_words * k.threads_per_block * 4
+        if self.check_limit and k.total_shared > SMEM_LIMIT:
+            raise ValueError(f"{k.name}: demotion exceeds shared memory limit")
+
+
+class LocalSpace(SpillSpace):
+    """nvcc-style local-memory spill slots (per-thread, hardware-indexed)."""
+
+    name = "local"
+    load_op = "LDL"
+    store_op = "STL"
+    needs_base = False
+
+    def offsets(self, ctx: "PassContext", width: int) -> List[int]:
+        return [(ctx.demoted_words + j) * 4 for j in range(width)]
+
+
+def spill_space(name: str, **kwargs) -> SpillSpace:
+    """Look up a spill space by name (``"shared"`` / ``"local"``); keyword
+    arguments are forwarded to the space constructor (e.g.
+    ``spill_space("shared", check_limit=False)``)."""
+    if name == "shared":
+        return SharedSpace(**kwargs)
+    if name == "local":
+        return LocalSpace(**kwargs)
+    raise ValueError(f"unknown spill space {name!r}; want 'shared' or 'local'")

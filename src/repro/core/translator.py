@@ -4,21 +4,31 @@ The paper's tool extracts SASS from a ``.cubin``, applies RegDem, and
 re-inserts the code with MaxAs.  The same pipeline runs here on the
 pseudo-cubin container of :mod:`repro.binary`:
 
-    disassemble (loads) -> choose targets -> transform (RegDem)
+    disassemble (loads) -> choose targets -> transform (pass pipeline)
         -> self-check -> reassemble (dumps)
 
 ``translate`` is bytes-in / bytes-out when handed container bytes — a true
 binary->binary translator — and also accepts an in-memory :class:`Kernel`,
 returning the full :class:`TranslationReport` for inspection.
 
-The self-check runs the schedule verifier and the dataflow-equivalence
-oracle on every emitted variant, and the container round-trip oracle on
-every emitted binary — a translated binary that fails any of these is a
-translator bug, never a tolerated output.
+Every variant is produced by the unified pass pipeline
+(:mod:`repro.core.passes`), which runs the schedule verifier and the
+dataflow-equivalence oracle after **every** pass; the container round-trip
+oracle then guards every emitted binary.  A translated binary that fails any
+of these is a translator bug, never a tolerated output.  Per-pass
+diagnostics/timings surface in :attr:`TranslationReport.pass_stats`.
 
 ``translate`` is the "automatic utility" of §3: it enumerates occupancy
 cliffs, generates a RegDem variant per (target x option-combination), and
 uses the §4 performance predictor to pick what to ship.
+
+At the service layer, :class:`TranslationService` makes the translator a
+**batch, cached, multi-kernel** pipeline: :func:`translate_binary` accepts a
+multi-kernel container (format v2), translates every kernel in it, and keys
+a :class:`TranslationCache` by per-kernel content CRC
+(:func:`repro.binary.container.kernel_crc`) plus the translation parameters,
+so a repeated kernel is served byte-identically with zero pipeline passes
+run.
 """
 
 from __future__ import annotations
@@ -29,7 +39,7 @@ from typing import Dict, List, Optional, Tuple, Union
 
 from .candidates import STRATEGIES
 from .isa import Kernel, equivalent, parse_kernel
-from .occupancy import occupancy_of
+from .passes import PassStat, PassVerificationError
 from .predictor import predict
 from .regdem import RegDemOptions, RegDemResult, auto_targets, demote
 from .sched import verify_schedule
@@ -47,12 +57,19 @@ class TranslationReport:
     considered: List[str]
     predictions: Dict[str, float]
     results: Dict[str, RegDemResult] = field(default_factory=dict)
+    #: per-pass diagnostics/timings per considered variant label
+    pass_stats: Dict[str, List[PassStat]] = field(default_factory=dict)
 
     @property
     def chosen_kernel(self) -> Kernel:
         if self.chosen == "nvcc":
             raise KeyError("baseline chosen; no transformed kernel")
         return self.results[self.chosen].kernel
+
+    @property
+    def total_pipeline_seconds(self) -> float:
+        """Wall time spent inside transformation passes for this kernel."""
+        return sum(p.seconds for stats in self.pass_stats.values() for p in stats)
 
 
 def option_space(
@@ -95,6 +112,8 @@ def option_space(
 
 
 def self_check(original: Kernel, transformed: Kernel, label: str) -> None:
+    """Schedule + dataflow validation of one transformed kernel (the same
+    checks the pass pipeline applies after every pass)."""
     errs = verify_schedule(transformed)
     if errs:
         raise TranslationError(f"{label}: schedule violations: {errs[:3]}")
@@ -112,8 +131,9 @@ def translate(
 
     Given a :class:`Kernel`, returns the :class:`TranslationReport`.  Given
     pseudo-cubin container bytes (:func:`repro.binary.dumps`), runs the same
-    pipeline binary->binary and returns the container bytes of the chosen
-    variant — the paper's actual tool shape.
+    pipeline binary->binary — over *every* kernel in the container — and
+    returns the container bytes of the chosen variants, the paper's actual
+    tool shape.
     """
     if isinstance(kernel, (bytes, bytearray, memoryview)):
         out, _ = translate_binary(
@@ -129,13 +149,20 @@ def translate(
     variants: Dict[str, Kernel] = {"nvcc": kernel}
     results: Dict[str, RegDemResult] = {}
     ranks: Dict[str, int] = {"nvcc": 0}
+    pass_stats: Dict[str, List[PassStat]] = {}
     for tgt in targets:
         for opt in opts:
             label = f"regdem@{tgt}:{opt.label()}"
-            res = demote(kernel, tgt, opt)
-            self_check(kernel, res.kernel, label)
+            # the pipeline self-checks schedule validity and dataflow
+            # equivalence after every pass (verify="each" inside demote);
+            # surface failures under the translator's exception type
+            try:
+                res = demote(kernel, tgt, opt)
+            except PassVerificationError as exc:
+                raise TranslationError(f"{label}: {exc}") from exc
             variants[label] = res.kernel
             results[label] = res
+            pass_stats[label] = res.passes
             ranks[label] = sum(
                 (opt.bank_avoid, opt.elim_redundant, opt.reschedule, opt.substitute)
             )
@@ -154,7 +181,163 @@ def translate(
         considered=sorted(variants),
         predictions=predictions,
         results=results,
+        pass_stats=pass_stats,
     )
+
+
+# ---------------------------------------------------------------------------
+# The batch, cached, multi-kernel binary-translation service
+# ---------------------------------------------------------------------------
+
+
+class TranslationCache:
+    """Content-CRC-keyed cache of finished translations.
+
+    The key is ``(kernel_crc(kernel), target_regs, option labels,
+    use_predictor)`` — everything that determines the translator's output.
+    Because a 32-bit CRC can collide, every entry also stores the input
+    kernel's rendering and a hit is only served when it matches — a
+    colliding kernel is treated as a miss, never given another kernel's
+    translation.  A hit returns a *copy* of the chosen kernel (callers may
+    mutate it), whose re-serialization is byte-identical to the original
+    translation, plus the original :class:`TranslationReport`.  The report
+    object is **shared** between the original miss and every later hit:
+    treat it as read-only.  No pipeline pass runs on a hit.
+    """
+
+    def __init__(self, max_entries: Optional[int] = None):
+        self._entries: Dict[tuple, Tuple[str, Kernel, TranslationReport]] = {}
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    @staticmethod
+    def key(
+        kernel: Kernel,
+        target_regs: Optional[int],
+        options: Optional[List[RegDemOptions]],
+        use_predictor: bool,
+    ) -> tuple:
+        # kernels decoded from a v2 container carry their verified content
+        # CRC; recompute (one text encode) only for v1/in-memory kernels
+        crc = getattr(kernel, "content_crc", None)
+        if crc is None:
+            from repro.binary.container import kernel_crc
+
+            crc = kernel_crc(kernel)
+        opt_sig = None if options is None else tuple(o.label() for o in options)
+        return (crc, target_regs, opt_sig, use_predictor)
+
+    def get(self, key: tuple, kernel: Kernel) -> Optional[Tuple[Kernel, TranslationReport]]:
+        entry = self._entries.get(key)
+        if entry is not None:
+            input_render, chosen, report = entry
+            if input_render == kernel.render():
+                self.hits += 1
+                return chosen.copy(), report
+        self.misses += 1
+        return None
+
+    def put(self, key: tuple, kernel: Kernel, chosen: Kernel, report: TranslationReport) -> None:
+        if self.max_entries is not None and len(self._entries) >= self.max_entries:
+            # drop the oldest entry (insertion order) — simple FIFO bound
+            self._entries.pop(next(iter(self._entries)))
+        self._entries[key] = (kernel.render(), chosen.copy(), report)
+
+
+@dataclass
+class BatchTranslationReport:
+    """Outcome of one batch translation: per-kernel reports + cache telemetry.
+
+    ``reports`` entries for cached kernels are the *shared* report objects
+    from the original translation — read, don't mutate."""
+
+    reports: List[TranslationReport]
+    #: per kernel, whether it was served from the translation cache
+    cached: List[bool]
+    cache_hits: int
+    cache_misses: int
+
+    @property
+    def kernel_names(self) -> List[str]:
+        return [r.kernel_name for r in self.reports]
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+
+class TranslationService:
+    """Batch, cached, multi-kernel binary-translation service.
+
+    Holds one :class:`TranslationCache` across calls; feed it multi-kernel
+    (or single-kernel) container bytes and it translates every kernel,
+    serving repeated content from the cache without running a single
+    pipeline pass.
+    """
+
+    def __init__(
+        self,
+        target_regs: Optional[int] = None,
+        options: Optional[List[RegDemOptions]] = None,
+        use_predictor: bool = True,
+        cache: Optional[TranslationCache] = None,
+    ):
+        self.target_regs = target_regs
+        self.options = options
+        self.use_predictor = use_predictor
+        self.cache = cache if cache is not None else TranslationCache()
+
+    def translate(self, data: bytes) -> Tuple[bytes, BatchTranslationReport]:
+        """Container bytes in, container bytes out, every kernel translated."""
+        from repro.binary import container
+        from repro.binary.roundtrip import RoundTripError, verified_dumps_many
+
+        kernels = container.loads_many(data)
+        hits0, misses0 = self.cache.hits, self.cache.misses
+        chosen_list: List[Kernel] = []
+        reports: List[TranslationReport] = []
+        cached_flags: List[bool] = []
+        for kernel in kernels:
+            key = self.cache.key(
+                kernel, self.target_regs, self.options, self.use_predictor
+            )
+            entry = self.cache.get(key, kernel)
+            if entry is not None:
+                chosen, report = entry
+                cached_flags.append(True)
+            else:
+                report = translate(
+                    kernel,
+                    target_regs=self.target_regs,
+                    options=self.options,
+                    use_predictor=self.use_predictor,
+                )
+                chosen = kernel if report.chosen == "nvcc" else report.chosen_kernel
+                self.cache.put(key, kernel, chosen, report)
+                cached_flags.append(False)
+            chosen_list.append(chosen)
+            reports.append(report)
+
+        try:
+            out = verified_dumps_many(chosen_list)
+        except RoundTripError as exc:
+            raise TranslationError(str(exc)) from exc
+        return out, BatchTranslationReport(
+            reports=reports,
+            cached=cached_flags,
+            cache_hits=self.cache.hits - hits0,
+            cache_misses=self.cache.misses - misses0,
+        )
 
 
 def translate_binary(
@@ -162,30 +345,30 @@ def translate_binary(
     target_regs: Optional[int] = None,
     options: Optional[List[RegDemOptions]] = None,
     use_predictor: bool = True,
-) -> Tuple[bytes, TranslationReport]:
+    cache: Optional[TranslationCache] = None,
+) -> Tuple[bytes, Union[TranslationReport, BatchTranslationReport]]:
     """Binary->binary pyReDe: container bytes in, container bytes out.
 
-    Disassembles the single-kernel container, runs :func:`translate`, and
-    reassembles the chosen variant (the unmodified input kernel when the
+    Disassembles the container, runs the pass pipeline on **every** kernel
+    in it (with an optional shared :class:`TranslationCache`), and
+    reassembles the chosen variants (the unmodified input kernel where the
     predictor keeps the nvcc baseline).  The emitted container passes the
     round-trip oracle before being returned.
-    """
-    from repro.binary import container
-    from repro.binary.roundtrip import RoundTripError, verified_dumps
 
-    kernel = container.loads(data)
-    report = translate(
-        kernel,
+    For a single-kernel container the second return value is that kernel's
+    :class:`TranslationReport` (the historical contract); for a multi-kernel
+    container it is the :class:`BatchTranslationReport`.
+    """
+    service = TranslationService(
         target_regs=target_regs,
         options=options,
         use_predictor=use_predictor,
+        cache=cache,
     )
-    chosen = kernel if report.chosen == "nvcc" else report.chosen_kernel
-    try:
-        out = verified_dumps(chosen)
-    except RoundTripError as exc:
-        raise TranslationError(str(exc)) from exc
-    return out, report
+    out, batch = service.translate(data)
+    if len(batch.reports) == 1:
+        return out, batch.reports[0]
+    return out, batch
 
 
 def roundtrip(kernel: Kernel) -> Kernel:

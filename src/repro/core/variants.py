@@ -20,19 +20,26 @@ The aggressive allocator mirrors nvcc's documented behaviour: it prefers
 re-materialization over spilling (avoiding local-memory latency at the cost
 of extra dynamic instructions), which is exactly the single-thread
 performance loss the paper's §5.5 discussion attributes to the alternatives.
+
+All five variants are instances of the unified pass pipeline
+(:mod:`repro.core.passes`): :func:`aggressive` binds
+:func:`~repro.core.passes.aggressive_pipeline` to a
+:class:`~repro.core.spillspace.LocalSpace` or
+:class:`~repro.core.spillspace.SharedSpace`, and ``regdem`` is
+:func:`repro.core.regdem.demote`'s demotion pipeline.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Union
 
-from .candidates import make_candidates, operand_conflicts
-from .compaction import compact, packed_reg_count
-from .isa import RZ, Ctrl, Instr, Kernel, Label
+from .isa import Kernel
 from .kernelgen import Profile, generate
-from .regdem import REG_FLOOR, RegDemOptions, RegDemResult, _demote_one, demote
-from .sched import fixup_stalls, repair_war
+from .passes import PassContext, PassStat, RegDemOptions, aggressive_pipeline
+from .regdem import REG_FLOOR, RegDemResult, demote
+from .spillspace import LocalSpace, SpillSpace
+from .spillspace import spill_space as make_space
 
 VARIANT_NAMES = ("nvcc", "regdem", "local", "local-shared", "local-shared-relax")
 
@@ -47,6 +54,8 @@ class Variant:
     remat: int = 0
     #: RegDem result when applicable
     regdem: Optional[RegDemResult] = None
+    #: per-pass diagnostics/timings from the generating pipeline
+    passes: List[PassStat] = field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -54,130 +63,52 @@ class Variant:
 # ---------------------------------------------------------------------------
 
 
-def _const_defs(kernel: Kernel) -> Dict[int, float]:
-    """Registers defined exactly once, by a ``MOV32I`` (rematerializable)."""
-    defs: Dict[int, List[Instr]] = {}
-    for ins in kernel.instructions():
-        for r in ins.dsts:
-            defs.setdefault(r, []).append(ins)
-    out: Dict[int, float] = {}
-    for r, instrs in defs.items():
-        if len(instrs) == 1 and instrs[0].op == "MOV32I" and instrs[0].pred is None:
-            out[r] = instrs[0].imm or 0.0
-    return out
-
-
-def _remat_one(kernel: Kernel, r: int, value: float, tmp: int) -> None:
-    """Remove ``r``'s constant definition; recompute into ``tmp`` before each
-    use ("less efficient instruction sequences", paper §1)."""
-    new_items: List[object] = []
-    for it in kernel.items:
-        if isinstance(it, Label):
-            new_items.append(it)
-            continue
-        ins: Instr = it
-        if ins.op == "MOV32I" and ins.dsts == [r]:
-            continue  # drop the definition
-        if r in ins.srcs:
-            mov = Instr(
-                "MOV32I",
-                [tmp],
-                imm=value,
-                pred=ins.pred,
-                pred_neg=ins.pred_neg,
-                tag="remat",
-            )
-            new_items.append(mov)
-            ins.srcs = [tmp if s == r else s for s in ins.srcs]
-        new_items.append(ins)
-    kernel.items = new_items
-
-
 def aggressive(
     kernel: Kernel,
     target_regs: int,
-    spill_space: str = "local",
+    spill_space: Union[str, SpillSpace] = "local",
     max_remat: Optional[int] = None,
+    verify: str = "each",
 ) -> Variant:
     """Reduce register usage to ``target_regs`` the way nvcc does under
     ``--maxrregcount``: rematerialize first, then spill.
 
     ``spill_space='shared'`` converts the spill code to shared memory — the
-    Hayes & Zhang local->shared transformation [11].
+    Hayes & Zhang local->shared transformation [11].  A
+    :class:`~repro.core.spillspace.SpillSpace` instance is also accepted.
     """
-    k = kernel.copy()
-    n = k.threads_per_block
-    consts = _const_defs(k)
-    victims = make_candidates(k, "static")
-    conflicts = operand_conflicts(k)
-
-    # reserve the spill value register and a distinct remat temporary
-    # (one instruction may need both a reloaded spill and a recomputed
-    # constant simultaneously); shared space also needs a base register
-    base = k.reg_count
-    wide = any(w == 2 for _, w in victims)
-    if wide and base % 2:
-        base += 1
-    rsv = base
-    rtmp = rsv + (2 if wide else 1)
-    if spill_space == "shared":
-        rda = rtmp + 1
-        k.rda = rda
-        s2r = Instr("S2R", [rsv], ctrl=Ctrl(stall=1))
-        shl = Instr("SHL", [rda], [rsv], imm=2.0, ctrl=Ctrl(stall=15))
-        s2r.ctrl.write_bar = 0
-        shl.ctrl.wait.add(0)
-        k.items[:0] = [s2r, shl]
-        load_op, store_op = "LDS", "STS"
-        s_up = (k.shared_size + 3) // 4 * 4
+    if isinstance(spill_space, SpillSpace):
+        space = spill_space
+    elif spill_space == "shared":
+        # the historical conversion never guarded the 48 KiB limit
+        space = make_space("shared", check_limit=False)
     else:
-        rda = RZ
-        load_op, store_op = "LDL", "STL"
-        s_up = 0
+        space = make_space(spill_space)
 
-    remat_done = 0
-    rematted: Set[int] = set()
-    spilled_words = 0
-    spilled_regs: List[Tuple[int, int]] = []
-    floor = max(target_regs, 0)
-
-    # pass 1: rematerialization (nvcc prefers slower sequences over spills).
-    # Two rematerialized values in one instruction would need two temps, so
-    # conflicting candidates are skipped (same rule as demotion conflicts).
-    for r, width in list(victims):
-        if packed_reg_count(k) <= floor:
-            break
-        if width != 1 or r not in consts:
-            continue
-        if max_remat is not None and remat_done >= max_remat:
-            break
-        if conflicts.get(r, set()) & rematted:
-            continue
-        _remat_one(k, r, consts[r], rtmp)
-        remat_done += 1
-        rematted.add(r)
-        victims = [(v, w) for v, w in victims if v != r]
-    repair_war(k)
-
-    # pass 2: spill the remainder
-    while victims and packed_reg_count(k) > floor:
-        r, width = victims.pop(0)
-        if spill_space == "shared":
-            offsets = [s_up + (spilled_words + j) * n * 4 for j in range(width)]
-        else:
-            offsets = [(spilled_words + j) * 4 for j in range(width)]
-        _demote_one(k, r, width, offsets, rsv, rda, load_op, store_op)
-        spilled_regs.append((r, width))
-        spilled_words += width
-        if spill_space == "shared":
-            k.demoted_size = spilled_words * n * 4
-        bad = conflicts.get(r, set())
-        victims = [(v, w) for v, w in victims if v not in bad]
-
-    compact(k)
-    fixup_stalls(k)
-    name = "local" if spill_space == "local" else "local-shared"
-    return Variant(name=name, kernel=k, spilled=spilled_words, remat=remat_done)
+    opts = RegDemOptions(
+        candidate_strategy="static",
+        bank_avoid=False,
+        elim_redundant=False,
+        reschedule=False,
+        substitute=False,
+    )
+    ctx = PassContext(
+        kernel,
+        space,
+        opts,
+        target=target_regs,
+        floor=max(target_regs, 0),  # nvcc honours the raw target, not REG_FLOOR
+        max_remat=max_remat,
+    )
+    aggressive_pipeline(verify=verify).run(ctx)
+    name = "local" if isinstance(space, LocalSpace) else "local-shared"
+    return Variant(
+        name=name,
+        kernel=ctx.kernel,
+        spilled=ctx.demoted_words,
+        remat=ctx.remat,
+        passes=ctx.passes,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -198,7 +129,8 @@ def make_variants(
 
     rd = demote(base, target, regdem_options or RegDemOptions())
     out["regdem"] = Variant(
-        name="regdem", kernel=rd.kernel, spilled=rd.demoted_words, regdem=rd
+        name="regdem", kernel=rd.kernel, spilled=rd.demoted_words, regdem=rd,
+        passes=rd.passes,
     )
 
     # nvcc's remat capacity is bounded so that its local-spill count matches

@@ -24,12 +24,11 @@ Usage::
 """
 
 import argparse
-import dataclasses
 import json
 import re
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,17 +14,15 @@ inputs of each step kind; ``cell_shardings`` assigns NamedShardings:
 
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs import ShapeCell, get_config
-from repro.models import Model, ModelConfig
+from repro.configs import ShapeCell
+from repro.models import ModelConfig
 from repro.models.mamba2 import D_CONV, mamba_dims
 from repro.models import hybrid as hybrid_mod
 

@@ -6,7 +6,6 @@ chosen architecture — every assigned arch is selectable.
 """
 
 import argparse
-import dataclasses
 
 from repro.configs import ARCH_IDS, get_config, param_count, reduced_config
 from repro.data import DataConfig

@@ -9,9 +9,8 @@ O(1) HLO size in depth (required for the 512-device dry-run).
 from __future__ import annotations
 
 import contextlib
-import dataclasses
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

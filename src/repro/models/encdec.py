@@ -13,7 +13,7 @@ noted in DESIGN.md).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ applications, not layers.
 
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax

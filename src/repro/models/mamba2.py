@@ -16,7 +16,6 @@ Decode is the O(1) recurrent update: ``h = dA * h + dt*B (x); y = C . h``.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
 import jax

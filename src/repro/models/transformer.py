@@ -19,17 +19,15 @@ sharding (:mod:`repro.sharding`).
 
 from __future__ import annotations
 
-import dataclasses
 import math
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .attention import attention
-from .common import scan as common_scan, apply_mrope, apply_rope, dense_init, rms_norm, swiglu, trunc_normal
+from .common import scan as common_scan, apply_mrope, apply_rope, rms_norm, swiglu, trunc_normal
 
 Pytree = Any
 

@@ -9,7 +9,7 @@ are fp32; parameters may be bf16 (mixed precision).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -33,7 +33,7 @@ from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, SyntheticLM
 from repro.models import Model, ModelConfig
 from repro.optim import AdamWConfig, adamw_init, adamw_update
-from repro.sharding import ShardingRules, default_rules, logical_to_sharding
+from repro.sharding import default_rules, logical_to_sharding
 
 Pytree = Any
 

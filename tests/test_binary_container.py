@@ -6,7 +6,7 @@ import pytest
 from repro.binary import container
 from repro.binary.container import ContainerError, dumps, kernel_names, loads, loads_many
 from repro.binary.encoding import EncodingError, instr_addr
-from repro.core.isa import Ctrl, Instr, Kernel, Label
+from repro.core.isa import Instr, Kernel, Label
 from repro.core.kernelgen import paper_kernel
 from repro.core.regdem import auto_targets, demote
 from repro.core.sched import schedule
@@ -105,21 +105,79 @@ def test_bitflip_rejected_by_content_crc():
 
 def test_reg_count_tamper_rejected():
     # flip a register number inside the first instruction record AND forge
-    # the content CRC: the declared-vs-recomputed register count check is
-    # the second line of defense and must still catch it
+    # the content CRC: the declared-vs-recomputed register count check must
+    # still catch it.  Uses a v1 container (no per-kernel CRC) so the tamper
+    # reaches that deeper line of defense.
     import struct
     import zlib
 
     k = tiny_kernel()
-    blob = bytearray(dumps(k))
+    blob = bytearray(dumps(k, version=1))
     # first text section starts right after the 32-byte header + kinfo
-    text_off = 32 + container.KINFO_SIZE
+    text_off = 32 + container.KINFO_SIZES[1]
     dst_off = text_off + instr_addr(0) + 4  # record byte 4 = dst reg
     assert blob[dst_off] == 4  # MOV32I dst is R4
     blob[dst_off] = 200
     struct.pack_into("<I", blob, 28, zlib.crc32(bytes(blob[32:])) & 0xFFFFFFFF)
     with pytest.raises(ContainerError, match="reg count"):
         loads(bytes(blob))
+
+
+def test_kernel_crc_tamper_rejected_in_v2():
+    # same tamper with a forged outer CRC on a v2 container: the per-kernel
+    # content CRC is the line of defense that fires
+    import struct
+    import zlib
+
+    k = tiny_kernel()
+    blob = bytearray(dumps(k))
+    text_off = 32 + container.KINFO_SIZES[container.VERSION]
+    blob[text_off + instr_addr(0) + 4] = 200
+    struct.pack_into("<I", blob, 28, zlib.crc32(bytes(blob[32:])) & 0xFFFFFFFF)
+    with pytest.raises(ContainerError, match="content CRC"):
+        loads(bytes(blob))
+
+
+def test_v1_container_still_loads():
+    """Backward compatibility: v1 single-kernel containers load unchanged."""
+    k = tiny_kernel()
+    k.shared_size = 512
+    k.rda = 9
+    v1 = dumps(k, version=1)
+    v2 = dumps(k)
+    assert len(v1) == len(v2) - 4  # v2 adds exactly the 4-byte per-kernel CRC
+    back = loads(v1)
+    assert back.render() == k.render()
+    assert back.rda == 9 and back.shared_size == 512
+    assert kernel_names(v1) == ["tiny"]
+    # and re-dumping the v1-decoded kernel produces a v2 container
+    assert loads(dumps(back)).render() == k.render()
+
+
+def test_v2_multi_kernel_roundtrip_with_crcs():
+    """A v2 multi-kernel container round-trips; per-kernel CRCs are stable,
+    layout-independent, and equal for identical content."""
+    a, b = tiny_kernel("a"), paper_kernel("md")
+    blob = dumps([a, b, tiny_kernel("a")])
+    back = loads_many(blob)
+    assert [k.name for k in back] == ["a", "md", "a"]
+    for orig, dec in zip([a, b, a], back):
+        assert dec.render() == orig.render()
+    # same content -> same CRC; CRC independent of sibling kernels
+    assert container.kernel_crc(back[0]) == container.kernel_crc(back[2])
+    assert container.kernel_crc(back[0]) == container.kernel_crc(tiny_kernel("a"))
+    assert container.kernel_crc(back[0]) != container.kernel_crc(tiny_kernel("c"))
+
+
+def test_unsupported_version_rejected():
+    import struct
+
+    blob = bytearray(dumps(tiny_kernel()))
+    struct.pack_into("<H", blob, 8, 99)  # version field follows the 8B magic
+    with pytest.raises(ContainerError, match="version"):
+        loads(bytes(blob))
+    with pytest.raises(ContainerError, match="version"):
+        dumps(tiny_kernel(), version=99)
 
 
 def test_empty_container_rejected():

@@ -1,9 +1,8 @@
 """Register-compaction tests (paper §3.3, Fig. 4)."""
 
-import pytest
 
-from repro.core.compaction import RelocationSpace, compact, packed_reg_count
-from repro.core.isa import Instr, Kernel, Label, equivalent, reg_bank
+from repro.core.compaction import compact, packed_reg_count
+from repro.core.isa import Instr, Kernel, equivalent
 from repro.core.kernelgen import all_paper_kernels
 from repro.core.sched import schedule
 

@@ -1,6 +1,5 @@
 """ISA-level unit tests: encoding round trips, interpreter, bank math."""
 
-import math
 
 import pytest
 

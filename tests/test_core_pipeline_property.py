@@ -1,0 +1,89 @@
+"""Property-based tests (hypothesis) for the spill pass pipeline: every
+pipeline *prefix* — the state at each pass boundary — preserves dataflow
+equivalence and schedule validity, for random kernels and option sets."""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.isa import equivalent
+from repro.core.kernelgen import generate, random_profile
+from repro.core.passes import (
+    PassContext,
+    RegDemOptions,
+    aggressive_pipeline,
+    demotion_pipeline,
+)
+from repro.core.regdem import auto_targets
+from repro.core.sched import verify_schedule
+from repro.core.spillspace import LocalSpace, SharedSpace
+
+_slow = settings(
+    max_examples=10,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+def _check_prefixes(original, pipeline, ctx, tag):
+    boundaries = []
+    pipeline.run(
+        ctx,
+        observer=lambda p, c: boundaries.append(
+            (p.name, verify_schedule(c.kernel), equivalent(original, c.kernel))
+        ),
+    )
+    assert boundaries, "pipeline ran no passes"
+    for pass_name, sched_errs, equiv in boundaries:
+        assert sched_errs == [], (tag, pass_name, sched_errs[:2])
+        assert equiv, (tag, f"dataflow broken after pass {pass_name!r}")
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    strategy=st.sampled_from(["static", "cfg", "conflict"]),
+    flags=st.tuples(st.booleans(), st.booleans(), st.booleans(), st.booleans()),
+)
+@_slow
+def test_demotion_pipeline_prefixes(seed, strategy, flags):
+    k = generate(random_profile(seed % 30))
+    targets = auto_targets(k)
+    if not targets:
+        return
+    b, e, r, s = flags
+    opt = RegDemOptions(
+        candidate_strategy=strategy,
+        bank_avoid=b,
+        elim_redundant=e,
+        reschedule=r,
+        substitute=s,
+    )
+    ctx = PassContext(k, SharedSpace(), opt, target=targets[0])
+    _check_prefixes(k, demotion_pipeline(opt, verify="none"), ctx, opt.label())
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    shared=st.booleans(),
+    max_remat=st.one_of(st.none(), st.integers(min_value=0, max_value=8)),
+)
+@_slow
+def test_aggressive_pipeline_prefixes(seed, shared, max_remat):
+    k = generate(random_profile(seed % 30))
+    targets = auto_targets(k)
+    if not targets:
+        return
+    space = SharedSpace(check_limit=False) if shared else LocalSpace()
+    opt = RegDemOptions(
+        candidate_strategy="static",
+        bank_avoid=False,
+        elim_redundant=False,
+        reschedule=False,
+        substitute=False,
+    )
+    ctx = PassContext(
+        k, space, opt, target=targets[0], floor=max(targets[0], 0), max_remat=max_remat
+    )
+    _check_prefixes(k, aggressive_pipeline(verify="none"), ctx, space.name)

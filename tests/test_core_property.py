@@ -6,7 +6,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 
 from hypothesis import HealthCheck, given, settings, strategies as st
 
-from repro.core.compaction import compact, packed_reg_count
+from repro.core.compaction import compact
 from repro.core.isa import NUM_SMEM_BANKS, equivalent, smem_bank
 from repro.core.kernelgen import generate, random_profile
 from repro.core.occupancy import MAXWELL, occupancy

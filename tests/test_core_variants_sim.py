@@ -6,7 +6,6 @@ import pytest
 
 from repro.core.isa import equivalent
 from repro.core.kernelgen import PAPER_BENCHMARKS, paper_kernel
-from repro.core.occupancy import occupancy_of
 from repro.core.sched import verify_schedule
 from repro.core.simulator import flatten_trace, simulate, speedup
 from repro.core.variants import VARIANT_NAMES, aggressive, make_variants

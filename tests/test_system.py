@@ -1,14 +1,13 @@
 """End-to-end behaviour tests: the full pyReDe translation pipeline."""
 
-import pytest
 
 from repro.core.isa import equivalent
 from repro.core.kernelgen import PAPER_BENCHMARKS, paper_kernel
 from repro.core.occupancy import occupancy_of
-from repro.core.postopt import eliminate_redundant, reschedule
+from repro.core.postopt import eliminate_redundant
 from repro.core.regdem import RegDemOptions, demote
 from repro.core.sched import verify_schedule
-from repro.core.translator import TranslationError, option_space, roundtrip, translate
+from repro.core.translator import option_space, roundtrip, translate
 
 
 def test_translate_pipeline_end_to_end():
