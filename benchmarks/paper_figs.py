@@ -4,18 +4,25 @@ Each function emits ``name,us_per_call,derived`` CSV rows (one per cell).
 ``us_per_call`` is the simulated kernel execution time (total cycles at the
 Titan X's 1.075 GHz boost clock); ``derived`` carries the figure's metric
 (occupancy, speedup, ...).
+
+All simulator runs go through the process-wide content-addressed
+:data:`repro.core.simcache.DEFAULT_SIM_CACHE`, so sections stop re-measuring
+each other's kernels (fig6's baselines are fig9's; fig7's ``full`` demotion
+is table1's ``regdem`` variant), and variant generation runs the pass
+pipeline with the hot-path ``verify="final"`` policy.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 from repro.core.kernelgen import PAPER_BENCHMARKS
 from repro.core.occupancy import occupancy_of
 from repro.core.predictor import predict, predict_naive
 from repro.core.regdem import RegDemOptions, demote
-from repro.core.simulator import SimResult, simulate, speedup
+from repro.core.simcache import simulate_cached
+from repro.core.simulator import SimResult, speedup
 from repro.core.variants import make_variants
 
 CLOCK_GHZ = 1.075  # GTX Titan X boost clock
@@ -30,7 +37,6 @@ def _geomean(xs: List[float]) -> float:
 
 
 _VCACHE: Dict[str, Dict] = {}
-_SCACHE: Dict[Tuple[str, str], SimResult] = {}
 
 
 def _variants(name: str):
@@ -40,10 +46,7 @@ def _variants(name: str):
 
 
 def _sim(name: str, vname: str) -> SimResult:
-    key = (name, vname)
-    if key not in _SCACHE:
-        _SCACHE[key] = simulate(_variants(name)[vname].kernel)
-    return _SCACHE[key]
+    return simulate_cached(_variants(name)[vname].kernel)
 
 
 # ---------------------------------------------------------------------------
@@ -109,15 +112,21 @@ def fig7_postopt() -> List[str]:
     slow_bank, slow_enh = [], []
     for name, prof in PAPER_BENCHMARKS.items():
         base_kernel = _variants(name)["nvcc"].kernel
-        full = simulate(demote(base_kernel, prof.regdem_target, RegDemOptions()).kernel)
-        no_bank = simulate(
-            demote(base_kernel, prof.regdem_target, RegDemOptions(bank_avoid=False)).kernel
+        full = simulate_cached(
+            demote(base_kernel, prof.regdem_target, RegDemOptions(), verify="final").kernel
         )
-        no_enh = simulate(
+        no_bank = simulate_cached(
+            demote(
+                base_kernel, prof.regdem_target,
+                RegDemOptions(bank_avoid=False), verify="final",
+            ).kernel
+        )
+        no_enh = simulate_cached(
             demote(
                 base_kernel,
                 prof.regdem_target,
                 RegDemOptions(elim_redundant=False, reschedule=False, substitute=False),
+                verify="final",
             ).kernel
         )
         sb = full.total_cycles / no_bank.total_cycles
@@ -144,8 +153,11 @@ def fig8_candidates() -> List[str]:
         base_kernel = _variants(name)["nvcc"].kernel
         cycles = {}
         for strat in ("static", "cfg", "conflict"):
-            res = demote(base_kernel, prof.regdem_target, RegDemOptions(candidate_strategy=strat))
-            cycles[strat] = simulate(res.kernel).total_cycles
+            res = demote(
+                base_kernel, prof.regdem_target,
+                RegDemOptions(candidate_strategy=strat), verify="final",
+            )
+            cycles[strat] = simulate_cached(res.kernel).total_cycles
         best = min(cycles.values())
         wins[min(cycles, key=cycles.get)] += 1
         norm = {s: best / c for s, c in cycles.items()}

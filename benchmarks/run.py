@@ -2,18 +2,22 @@
 """Benchmark harness entry point.
 
 Sections:
-  table1    occupancy before/after RegDem          (paper Table 1)
-  fig6      variant speedups over nvcc             (paper Fig. 6)
-  fig7      post-spilling optimization ablation    (paper Fig. 7)
-  fig8      candidate-strategy comparison          (paper Fig. 8)
-  fig9      predictor vs oracle vs naive           (paper Fig. 9)
-  roofline  dry-run three-term roofline per cell   (EXPERIMENTS §Roofline)
-  binary    pseudo-cubin codec throughput + sizes  (writes BENCH_binary.json)
-  pipeline  batch-translate throughput, cache hit rate, per-pass breakdown
-            (writes BENCH_pipeline.json)
+  table1        occupancy before/after RegDem          (paper Table 1)
+  fig6          variant speedups over nvcc             (paper Fig. 6)
+  fig7          post-spilling optimization ablation    (paper Fig. 7)
+  fig8          candidate-strategy comparison          (paper Fig. 8)
+  fig9          predictor vs oracle vs naive           (paper Fig. 9)
+  roofline      dry-run three-term roofline per cell   (EXPERIMENTS §Roofline)
+  tpu_selector  TPU-adapted variant selector           (EXPERIMENTS §TPU)
+  binary        pseudo-cubin codec throughput + sizes  (writes BENCH_binary.json)
+  pipeline      batch-translate throughput, cache hit rate, per-pass breakdown
+                (writes BENCH_pipeline.json)
+  sim           simulator-engine throughput + sim-cache behaviour vs the
+                recorded pre-optimization baseline     (writes BENCH_sim.json)
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
-One section: ``... -m benchmarks.run --only fig6``
+Some sections: ``... -m benchmarks.run --only fig6,fig7`` (comma-separated
+and/or repeated ``--only``); an unknown section name is an error.
 """
 
 import argparse
@@ -23,23 +27,43 @@ import time
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    help="table1|fig6|fig7|fig8|fig9|roofline|binary|pipeline")
+    ap.add_argument(
+        "--only",
+        action="append",
+        default=None,
+        metavar="SECTION[,SECTION...]",
+        help="run only these sections (comma-separated, repeatable): "
+             "table1|fig6|fig7|fig8|fig9|roofline|tpu_selector|binary|"
+             "pipeline|sim",
+    )
     ap.add_argument("--binary-json", default=None, metavar="PATH",
                     help="where the binary section writes its JSON report "
                          "(default: BENCH_binary.json in the cwd)")
     ap.add_argument("--pipeline-json", default=None, metavar="PATH",
                     help="where the pipeline section writes its JSON report "
                          "(default: BENCH_pipeline.json in the cwd)")
+    ap.add_argument("--sim-json", default=None, metavar="PATH",
+                    help="where the sim section writes its JSON report "
+                         "(default: BENCH_sim.json in the cwd)")
     args = ap.parse_args()
 
-    from benchmarks import binary_bench, paper_figs, pipeline_bench, roofline, tpu_selector
+    from benchmarks import (
+        binary_bench,
+        paper_figs,
+        pipeline_bench,
+        roofline,
+        sim_bench,
+        tpu_selector,
+    )
 
     def binary_rows():
         return binary_bench.binary_rows(args.binary_json or binary_bench.JSON_PATH)
 
     def pipeline_rows():
         return pipeline_bench.pipeline_rows(args.pipeline_json or pipeline_bench.JSON_PATH)
+
+    def sim_rows():
+        return sim_bench.sim_rows(args.sim_json or sim_bench.JSON_PATH)
 
     sections = {
         "table1": paper_figs.table1_occupancy,
@@ -51,10 +75,27 @@ def main() -> None:
         "tpu_selector": tpu_selector.selector_rows,
         "binary": binary_rows,
         "pipeline": pipeline_rows,
+        "sim": sim_rows,
     }
+
+    selected = None
+    if args.only is not None:
+        selected = []
+        for chunk in args.only:
+            selected.extend(s.strip() for s in chunk.split(",") if s.strip())
+        unknown = sorted(set(selected) - set(sections))
+        if unknown:
+            ap.error(
+                f"unknown --only section(s): {', '.join(unknown)} "
+                f"(choose from: {', '.join(sections)})"
+            )
+        if not selected:
+            # "--only ''" / "--only ," must not silently run zero sections
+            ap.error(f"--only selected no sections (choose from: {', '.join(sections)})")
+
     print("name,us_per_call,derived")
     for name, fn in sections.items():
-        if args.only and name != args.only:
+        if selected is not None and name not in selected:
             continue
         t0 = time.time()
         for row in fn():

@@ -1,0 +1,101 @@
+"""Simulator-engine benchmark: tracks the measurement loop's own speed.
+
+Everything the harness reports is *measured on the simulator*, so the
+simulator's throughput bounds how large a variant sweep is feasible.  This
+section measures the two-stage engine (trace compiler + event-driven issue
+loop) end to end on a fixed workload — the ``nvcc`` and ``regdem`` variants
+of all nine paper benchmarks — and compares against the recorded
+pre-optimization baseline, so the engine's performance trajectory
+accumulates machine-readably in ``BENCH_sim.json`` across PRs.
+
+Also measured: the content-addressed :class:`repro.core.simcache.SimCache`
+(hit rate and per-hit latency over a repeated pass), since the harness and
+the service lean on it to avoid re-simulating identical kernels.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Iterator, Optional
+
+from repro.core.kernelgen import PAPER_BENCHMARKS
+from repro.core.simcache import SimCache
+from repro.core.simulator import simulate
+from repro.core.variants import make_variants
+
+#: Default location of the machine-readable report (cwd-relative, i.e. the
+#: repo root under the documented ``python -m benchmarks.run`` invocation).
+JSON_PATH = "BENCH_sim.json"
+
+#: Pre-optimization engine throughput on this exact workload (the PR-2 tree's
+#: cycle-by-cycle ``simulate()``, measured on the reference machine before
+#: the two-stage engine landed).  The CSV/JSON speedup is relative to this.
+BASELINE_KERNELS_PER_S = 1.77
+
+#: Workload: the nvcc + regdem variants of every paper benchmark.
+VARIANT_NAMES = ("nvcc", "regdem")
+
+
+def _workload():
+    kernels = []
+    for name in PAPER_BENCHMARKS:
+        vs = make_variants(PAPER_BENCHMARKS[name])
+        kernels.extend(vs[vn].kernel for vn in VARIANT_NAMES)
+    return kernels
+
+
+def sim_rows(json_path: Optional[str] = JSON_PATH) -> Iterator[str]:
+    """Yield CSV rows; write ``BENCH_sim.json`` as a side effect."""
+    kernels = _workload()
+    n = len(kernels)
+
+    # engine throughput: every kernel simulated fresh (no cache involved)
+    t0 = time.perf_counter()
+    dyn = sum(simulate(k).dynamic_instructions for k in kernels)
+    engine_s = time.perf_counter() - t0
+    kernels_per_s = n / engine_s
+
+    # cache behaviour: a cold pass populates, a warm pass must fully hit
+    cache = SimCache()
+    cold = [cache.simulate(k) for k in kernels]
+    hits_before_warm = cache.hits
+    t0 = time.perf_counter()
+    warm = [cache.simulate(k) for k in kernels]
+    warm_s = time.perf_counter() - t0
+    warm_hit_rate = (cache.hits - hits_before_warm) / n
+    assert all(
+        w.total_cycles == f.total_cycles for w, f in zip(warm, cold)
+    ), "cache hit diverged from fresh simulation"
+
+    report = {
+        "engine": {
+            "kernels": n,
+            "dynamic_instructions": dyn,
+            "seconds": round(engine_s, 3),
+            "kernels_per_s": round(kernels_per_s, 2),
+            "baseline_kernels_per_s": BASELINE_KERNELS_PER_S,
+            "speedup_vs_baseline": round(kernels_per_s / BASELINE_KERNELS_PER_S, 2),
+        },
+        "cache": {
+            "hits": cache.hits,
+            "misses": cache.misses,
+            "warm_hit_rate": round(warm_hit_rate, 3),
+            "warm_us_per_kernel": round(warm_s * 1e6 / n, 1),
+        },
+    }
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+    e, c = report["engine"], report["cache"]
+    yield (
+        f"sim_engine,{engine_s * 1e6 / n:.1f},"
+        f"kernels_per_s={e['kernels_per_s']};"
+        f"speedup_vs_baseline={e['speedup_vs_baseline']}x"
+    )
+    yield (
+        f"sim_cache_warm,{c['warm_us_per_kernel']},"
+        f"warm_hit_rate={c['warm_hit_rate']};hits={c['hits']};misses={c['misses']}"
+    )

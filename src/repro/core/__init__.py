@@ -16,6 +16,9 @@ Faithful-reproduction layer:
 * :mod:`repro.core.variants`    §5.3 comparison variants (Table 3), same
                                  pipeline, different configurations
 * :mod:`repro.core.simulator`   cycle-approximate Maxwell timing model
+                                 (two-stage: trace compiler + event-driven
+                                 issue loop, cycle-exact vs the reference)
+* :mod:`repro.core.simcache`    content-addressed sim/analysis cache
 * :mod:`repro.core.predictor`   §4 compile-time performance predictor
 * :mod:`repro.core.translator`  pyReDe driver: batch, cached, multi-kernel
                                  binary-translation service
@@ -47,6 +50,8 @@ from .passes import (
     demotion_pipeline,
 )
 from .regdem import RegDemOptions, RegDemResult, auto_targets, demote
+from .simcache import DEFAULT_SIM_CACHE, SimCache, simulate_cached
+from .simulator import SimResult, simulate, simulate_reference, speedup
 from .spillspace import LocalSpace, SharedSpace, SpillSpace
 from .translator import (
     BatchTranslationReport,
@@ -82,6 +87,13 @@ __all__ = [
     "RegDemResult",
     "auto_targets",
     "demote",
+    "DEFAULT_SIM_CACHE",
+    "SimCache",
+    "simulate_cached",
+    "SimResult",
+    "simulate",
+    "simulate_reference",
+    "speedup",
     "BatchTranslationReport",
     "TranslationCache",
     "TranslationReport",

@@ -225,6 +225,47 @@ def _next_uid() -> int:
     return _UID[0]
 
 
+#: Instr fields whose assignment invalidates the per-instruction operand
+#: cache (opcode metadata, register words, bank conflicts).
+_OPERAND_FIELDS = frozenset(("op", "dsts", "srcs"))
+
+
+class _OperandList(list):
+    """A list that invalidates its owning Instr's operand cache on mutation.
+
+    ``dsts``/``srcs`` keep full list semantics (``ins.dsts == [r]``,
+    ``.append`` in the parser, ...), but in-place mutation after the cache
+    has been read cannot leave it stale."""
+
+    __slots__ = ("_owner",)
+
+    def __init__(self, iterable=(), owner=None):
+        super().__init__(iterable)
+        self._owner = owner
+
+
+def _invalidating(name):
+    base = getattr(list, name)
+
+    def method(self, *args, **kwargs):
+        # getattr guard: pickle restores list items before the _owner slot
+        owner = getattr(self, "_owner", None)
+        if owner is not None:
+            object.__setattr__(owner, "_opc", None)
+        return base(self, *args, **kwargs)
+
+    method.__name__ = name
+    return method
+
+
+for _m in (
+    "__setitem__", "__delitem__", "__iadd__", "__imul__",
+    "append", "extend", "insert", "pop", "remove", "clear", "sort", "reverse",
+):
+    setattr(_OperandList, _m, _invalidating(_m))
+del _m
+
+
 @dataclass
 class Instr:
     """One machine instruction.
@@ -234,6 +275,12 @@ class Instr:
     :meth:`dst_words` / :meth:`src_words`).  Memory ops carry an address
     register in ``srcs[0]`` (loads) / ``srcs[0]`` plus value ``srcs[1]``
     (stores) and an immediate byte ``offset``.
+
+    Derived operand metadata (:attr:`info`, :meth:`dst_words`,
+    :meth:`src_words`, :meth:`reg_bank_conflicts`) is computed once per
+    static instruction and cached; assignment to ``op``/``dsts``/``srcs``
+    and in-place mutation of the operand lists (wrapped in
+    :class:`_OperandList`) both invalidate the cache.
     """
 
     op: str
@@ -257,11 +304,50 @@ class Instr:
     tag: str = "orig"
     uid: int = field(default_factory=_next_uid)
 
+    # -- operand cache -------------------------------------------------------
+
+    def __setattr__(self, name: str, value) -> None:
+        if name in _OPERAND_FIELDS:
+            if isinstance(value, list):
+                value = _OperandList(value, self)
+            object.__setattr__(self, name, value)
+            object.__setattr__(self, "_opc", None)
+        else:
+            object.__setattr__(self, name, value)
+
+    def _operand_cache(self) -> tuple:
+        """(info, dst_words, src_words, bank_conflicts), computed lazily."""
+        info = OPCODES[self.op]
+        dw: List[int] = []
+        for r in self.dsts:
+            if r == RZ:
+                continue
+            dw.extend(range(r, r + info.width))
+        sw: List[int] = []
+        w = info.width
+        is_memory = info.is_memory
+        for i, r in enumerate(self.srcs):
+            if r == RZ:
+                continue
+            # address operands of wide memory ops are still 32-bit
+            if is_memory and i == 0:
+                sw.append(r)
+            else:
+                sw.extend(range(r, r + w))
+        banks: Dict[int, Set[int]] = {}
+        for r in set(sw):
+            banks.setdefault(reg_bank(r), set()).add(r)
+        conflicts = sum(len(v) - 1 for v in banks.values())
+        cache = (info, tuple(dw), tuple(sw), conflicts)
+        object.__setattr__(self, "_opc", cache)
+        return cache
+
     # -- static metadata ----------------------------------------------------
 
     @property
     def info(self) -> OpInfo:
-        return OPCODES[self.op]
+        c = self._opc
+        return (c or self._operand_cache())[0]
 
     @property
     def is_label(self) -> bool:
@@ -269,27 +355,14 @@ class Instr:
 
     # -- register accessors (alias-aware) ------------------------------------
 
-    def dst_words(self) -> List[int]:
+    def dst_words(self) -> Tuple[int, ...]:
         """All destination register words including 64-bit aliases."""
-        out: List[int] = []
-        for r in self.dsts:
-            if r == RZ:
-                continue
-            out.extend(range(r, r + self.info.width))
-        return out
+        c = self._opc
+        return (c or self._operand_cache())[1]
 
-    def src_words(self) -> List[int]:
-        out: List[int] = []
-        w = self.info.width
-        for i, r in enumerate(self.srcs):
-            if r == RZ:
-                continue
-            # address operands of wide memory ops are still 32-bit
-            if self.info.is_memory and i == 0:
-                out.append(r)
-            else:
-                out.extend(range(r, r + w))
-        return out
+    def src_words(self) -> Tuple[int, ...]:
+        c = self._opc
+        return (c or self._operand_cache())[2]
 
     def regs(self) -> Set[int]:
         return set(self.dst_words()) | set(self.src_words())
@@ -309,10 +382,8 @@ class Instr:
 
     def reg_bank_conflicts(self) -> int:
         """Number of serialized extra cycles from same-bank source operands."""
-        banks: Dict[int, Set[int]] = {}
-        for r in set(self.src_words()):
-            banks.setdefault(reg_bank(r), set()).add(r)
-        return sum(len(v) - 1 for v in banks.values())
+        c = self._opc
+        return (c or self._operand_cache())[3]
 
     # -- printing -------------------------------------------------------------
 

@@ -47,7 +47,7 @@ from .isa import (
     OpClass,
     equivalent,
 )
-from .sched import fixup_stalls, repair_war, verify_schedule
+from .sched import _blocks, fixup_stalls, repair_war, verify_block
 from .spillspace import SpillSpace
 
 #: Hard floor below which demotion gives no occupancy benefit (paper §3).
@@ -60,6 +60,59 @@ PIPELINE_COUNTERS = {"pipelines": 0, "passes": 0}
 
 class PassVerificationError(RuntimeError):
     """A pipeline self-check failed: the named pass broke the kernel."""
+
+
+# ---------------------------------------------------------------------------
+# Incremental verification signatures
+# ---------------------------------------------------------------------------
+#
+# The pipeline's self-checks are incremental: each check records what it
+# proved, keyed by content signatures, so the next check only re-analyzes
+# what a pass actually touched.
+#
+# * The *schedule* verifier is per-barrier-scope local (barriers never span
+#   scopes), so only scopes whose scheduling signature changed re-verify.
+# * The *dataflow* oracle (interpreter equivalence vs the original) is
+#   whole-program, but a pass that leaves every semantic field untouched —
+#   e.g. a stall fixup, which edits only control words — cannot change
+#   dataflow, so the oracle is skipped while the semantic signature of the
+#   kernel matches the last proven-equivalent state.
+#
+# Signatures are full tuples (not hashes): a skipped check must imply true
+# content identity, never a hash coincidence.
+
+
+def _sem_sig_item(it) -> tuple:
+    """Everything the scalar interpreter can observe about one stream item."""
+    if isinstance(it, Label):
+        return ("L", it.name)
+    return (
+        it.op, tuple(it.dsts), tuple(it.srcs), it.imm, it.offset, it.target,
+        it.pred, it.pred_neg, it.pdst, it.trip_count,
+    )
+
+
+def _sem_signature(kernel: Kernel) -> tuple:
+    """Semantic content of the whole kernel (dataflow-oracle inputs)."""
+    return (
+        tuple(_sem_sig_item(it) for it in kernel.items),
+        frozenset(kernel.live_in),
+        frozenset(kernel.live_out),
+    )
+
+
+def _sched_signature(block: List[Instr]) -> tuple:
+    """Schedule-verifier-visible content of one barrier scope."""
+    return tuple(
+        (
+            _sem_sig_item(i),
+            i.ctrl.stall,
+            i.ctrl.write_bar,
+            i.ctrl.read_bar,
+            tuple(sorted(i.ctrl.wait)),
+        )
+        for i in block
+    )
 
 
 @dataclass
@@ -142,6 +195,13 @@ class PassContext:
         #: per-pass diagnostics/timings, in execution order
         self.passes: List[PassStat] = []
 
+        # incremental-verification state: per-scope schedule signatures last
+        # proven valid (None = nothing proven yet) and the semantic signature
+        # last proven dataflow-equivalent to the original (the fresh copy is
+        # equivalent by construction)
+        self._sched_sigs: Optional[List[tuple]] = None
+        self._sem_verified: tuple = _sem_signature(self.kernel)
+
     def pass_stats(self) -> Dict[str, Dict[str, int]]:
         """Per-pass stats keyed by pass name (last run wins on duplicates)."""
         return {p.name: dict(p.stats) for p in self.passes}
@@ -205,17 +265,37 @@ class PassPipeline:
 
     @staticmethod
     def check(ctx: PassContext, label: str, semantics: bool = True) -> None:
-        errs = verify_schedule(ctx.kernel)
-        if errs:
-            raise PassVerificationError(
-                f"{ctx.kernel.name}: schedule violations after pass "
-                f"'{label}': {errs[:3]}"
-            )
-        if semantics and not equivalent(ctx.original, ctx.kernel):
-            raise PassVerificationError(
-                f"{ctx.kernel.name}: dataflow mismatch vs original after "
-                f"pass '{label}'"
-            )
+        """Incremental self-check: re-verify only what changed.
+
+        Barrier scopes whose scheduling signature matches the last proven
+        state are skipped (scope verification is content-local); the
+        whole-program dataflow oracle is skipped while the kernel's semantic
+        signature matches the last proven-equivalent state (e.g. after a
+        stall fixup, which edits only control words).
+        """
+        blocks = _blocks(ctx.kernel)
+        sigs = [_sched_signature(b) for b in blocks]
+        old = ctx._sched_sigs
+        for i, (block, sig) in enumerate(zip(blocks, sigs)):
+            if old is not None and i < len(old) and old[i] == sig:
+                continue
+            errs = verify_block(block)
+            if errs:
+                ctx._sched_sigs = None
+                raise PassVerificationError(
+                    f"{ctx.kernel.name}: schedule violations after pass "
+                    f"'{label}': {errs[:3]}"
+                )
+        ctx._sched_sigs = sigs
+        if semantics:
+            sem = _sem_signature(ctx.kernel)
+            if sem != ctx._sem_verified:
+                if not equivalent(ctx.original, ctx.kernel):
+                    raise PassVerificationError(
+                        f"{ctx.kernel.name}: dataflow mismatch vs original "
+                        f"after pass '{label}'"
+                    )
+                ctx._sem_verified = sem
 
 
 # ---------------------------------------------------------------------------

@@ -150,7 +150,7 @@ def fit_occupancy_curve(threads_per_block: int = 128) -> List[Tuple[float, float
     """
     from .isa import Instr
     from .kernelgen import Profile, generate
-    from .simulator import simulate
+    from .simcache import simulate_cached
 
     prof = Profile(
         name="occ_micro",
@@ -175,7 +175,7 @@ def fit_occupancy_curve(threads_per_block: int = 128) -> List[Tuple[float, float
             # touch a high register once: same dynamic behaviour, padded
             # register footprint (the occupancy-calculator sees pad_regs)
             k.items.insert(0, Instr("MOV", [pad_regs - 1], [255]))
-        sim = simulate(k)
+        sim = simulate_cached(k)
         results.append((sim.occupancy.occupancy, float(sim.total_cycles)))
     agg: Dict[float, List[float]] = {}
     for occ, t in results:
@@ -225,6 +225,8 @@ def predict(
     ``option_rank`` breaks ties toward more enabled performance options
     (paper §5.7: "counting on potential benefits of the enabled options").
     """
+    from .simcache import estimate_stalls_cached
+
     occs = {
         n: min(occupancy_of(k, sm).occupancy, _launch_occupancy(k, sm))
         for n, k in variants.items()
@@ -232,7 +234,10 @@ def predict(
     occ_max = max(occs.values())
     preds: List[Prediction] = []
     for n, k in variants.items():
-        raw = estimate_stalls(k, occs[n])
+        # content-cached: a variant already analyzed at this occupancy
+        # anywhere in the process (e.g. by a previous translation of the
+        # same kernel) is served from DEFAULT_SIM_CACHE
+        raw = estimate_stalls_cached(k, occs[n])
         adj = f_occupancy(occs[n], curve) / f_occupancy(occ_max, curve) * raw
         preds.append(Prediction(name=n, stalls=raw, occupancy=occs[n], adjusted=adj))
     rank = option_rank or {}

@@ -270,6 +270,48 @@ def repair_war(kernel: Kernel) -> int:
     return added
 
 
+def verify_block(block: List[Instr]) -> List[str]:
+    """Schedule validation of ONE barrier scope (see :func:`verify_schedule`).
+
+    Barriers never span scopes, so scopes verify independently — this is what
+    lets the pass pipeline re-verify only the scopes a pass touched.
+    """
+    errors: List[str] = []
+    pending_write: Dict[int, int] = {}  # reg -> barrier
+    pending_read: Dict[int, int] = {}
+    for ins in block:
+        for b in ins.ctrl.wait:
+            if not 0 <= b < NUM_BARRIERS:
+                errors.append(f"{ins.render()}: wait on bad barrier {b}")
+            pending_write = {r: bb for r, bb in pending_write.items() if bb != b}
+            pending_read = {r: bb for r, bb in pending_read.items() if bb != b}
+        for r in ins.src_words():
+            if r in pending_write:
+                errors.append(
+                    f"{ins.render()}: reads R{r} guarded by unresolved "
+                    f"barrier {pending_write[r]}"
+                )
+        for r in ins.dst_words():
+            if r in pending_write:
+                errors.append(
+                    f"{ins.render()}: WAW on R{r} with unresolved "
+                    f"barrier {pending_write[r]}"
+                )
+            if r in pending_read:
+                errors.append(
+                    f"{ins.render()}: WAR on R{r} with unresolved read "
+                    f"barrier {pending_read[r]}"
+                )
+        if ins.ctrl.write_bar is not None:
+            for r in ins.dst_words():
+                pending_write[r] = ins.ctrl.write_bar
+        if ins.ctrl.read_bar is not None:
+            for r in ins.src_words():
+                if r != RZ:
+                    pending_read[r] = ins.ctrl.read_bar
+    return errors
+
+
 def verify_schedule(kernel: Kernel) -> List[str]:
     """Static schedule validation; returns a list of violations (empty = ok).
 
@@ -282,36 +324,5 @@ def verify_schedule(kernel: Kernel) -> List[str]:
     """
     errors: List[str] = []
     for block in _blocks(kernel):
-        pending_write: Dict[int, int] = {}  # reg -> barrier
-        pending_read: Dict[int, int] = {}
-        for ins in block:
-            for b in ins.ctrl.wait:
-                if not 0 <= b < NUM_BARRIERS:
-                    errors.append(f"{ins.render()}: wait on bad barrier {b}")
-                pending_write = {r: bb for r, bb in pending_write.items() if bb != b}
-                pending_read = {r: bb for r, bb in pending_read.items() if bb != b}
-            for r in ins.src_words():
-                if r in pending_write:
-                    errors.append(
-                        f"{ins.render()}: reads R{r} guarded by unresolved "
-                        f"barrier {pending_write[r]}"
-                    )
-            for r in ins.dst_words():
-                if r in pending_write:
-                    errors.append(
-                        f"{ins.render()}: WAW on R{r} with unresolved "
-                        f"barrier {pending_write[r]}"
-                    )
-                if r in pending_read:
-                    errors.append(
-                        f"{ins.render()}: WAR on R{r} with unresolved read "
-                        f"barrier {pending_read[r]}"
-                    )
-            if ins.ctrl.write_bar is not None:
-                for r in ins.dst_words():
-                    pending_write[r] = ins.ctrl.write_bar
-            if ins.ctrl.read_bar is not None:
-                for r in ins.src_words():
-                    if r != RZ:
-                        pending_read[r] = ins.ctrl.read_bar
+        errors.extend(verify_block(block))
     return errors

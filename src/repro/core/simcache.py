@@ -1,0 +1,184 @@
+"""Content-addressed simulation & analysis caching.
+
+The simulator is this repo's measurement instrument, and the benchmark
+harness, the predictor calibration, and the translation service all measure
+the *same kernels* over and over (fig6's nvcc baselines are fig9's, fig7's
+``full`` demotion is table1's ``regdem`` variant, ...).  A
+:class:`SimCache` makes every one of those a cache hit:
+
+* **key** — the kernel's content CRC (:func:`repro.binary.container.
+  kernel_crc`, the same content address the v2 container stores and the
+  translation cache keys) plus the SM configuration and engine parameters;
+* **collision guard** — a 32-bit CRC can collide, so every entry stores the
+  input kernel's rendering and a hit is only served when it matches: a
+  colliding kernel is a miss, never another kernel's measurement;
+* **stores** — finished :class:`~repro.core.simulator.SimResult` runs and
+  the predictor's whole-program stall estimates (keyed additionally by
+  occupancy), both immutable-by-convention; hits return shallow copies.
+
+:data:`DEFAULT_SIM_CACHE` is the process-wide instance shared by
+``benchmarks.paper_figs``, :func:`repro.core.predictor.fit_occupancy_curve`,
+:func:`repro.core.predictor.predict` (and through it the
+:class:`~repro.core.translator.TranslationService` predictor path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from .isa import Kernel
+from .occupancy import MAXWELL, SMConfig
+from .simulator import SimResult, simulate
+
+
+def _guard(kernel: Kernel) -> str:
+    """Collision-guard string: everything the simulator and the stall
+    estimator observe.  ``Kernel.render()`` covers the instruction stream
+    and control words; launch geometry and loop trip counts ride alongside
+    (they are in the CRC but not in the rendering)."""
+    trips = ",".join(
+        str(ins.trip_count)
+        for ins in kernel.instructions()
+        if ins.trip_count is not None
+    )
+    return (
+        f"{kernel.num_blocks}|{kernel.threads_per_block}|"
+        f"{kernel.shared_size}|{kernel.demoted_size}|{trips}\n"
+        + kernel.render()
+    )
+
+
+class SimCache:
+    """Content-addressed cache of simulator runs and stall-estimate analyses.
+
+    ``max_entries`` bounds each table FIFO-style (insertion order), matching
+    :class:`repro.core.translator.TranslationCache`; ``None`` is unbounded
+    (the benchmark harness working set is small and enumerable).
+    """
+
+    def __init__(self, max_entries: Optional[int] = None):
+        self.max_entries = max_entries
+        #: (crc, sm, max_cycles) -> (render, SimResult)
+        self._sims: Dict[tuple, Tuple[str, SimResult]] = {}
+        #: (crc, occupancy) -> (render, stalls)
+        self._stalls: Dict[tuple, Tuple[str, float]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._sims) + len(self._stalls)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": round(self.hit_rate, 3),
+            "sim_entries": len(self._sims),
+            "stall_entries": len(self._stalls),
+        }
+
+    def clear(self) -> None:
+        self._sims.clear()
+        self._stalls.clear()
+        self.hits = 0
+        self.misses = 0
+
+    # -- keying ---------------------------------------------------------------
+
+    @staticmethod
+    def content_key(kernel: Kernel) -> int:
+        """The kernel's content address (v2-container CRC, recomputed only
+        for kernels that did not come out of a v2 container)."""
+        crc = getattr(kernel, "content_crc", None)
+        if crc is None:
+            from repro.binary.container import kernel_crc
+
+            crc = kernel_crc(kernel)
+        return crc
+
+    def _get(self, table: dict, key: tuple, render: str):
+        entry = table.get(key)
+        if entry is not None and entry[0] == render:
+            self.hits += 1
+            return entry[1]
+        self.misses += 1
+        return None
+
+    def _put(self, table: dict, key: tuple, render: str, value) -> None:
+        if self.max_entries is not None and len(table) >= self.max_entries:
+            table.pop(next(iter(table)))
+        table[key] = (render, value)
+
+    # -- cached operations ----------------------------------------------------
+
+    def simulate(
+        self,
+        kernel: Kernel,
+        sm: SMConfig = MAXWELL,
+        max_cycles: int = 50_000_000,
+    ) -> SimResult:
+        """:func:`repro.core.simulator.simulate`, content-cached."""
+        key = (self.content_key(kernel), sm, max_cycles)
+        render = _guard(kernel)
+        hit = self._get(self._sims, key, render)
+        if hit is not None:
+            return dataclasses.replace(hit)
+        res = simulate(kernel, sm, max_cycles)
+        self._put(self._sims, key, render, res)
+        return dataclasses.replace(res)
+
+    def estimate_stalls(self, kernel: Kernel, occupancy: float) -> float:
+        """:func:`repro.core.predictor.estimate_stalls`, content-cached.
+
+        Occupancy is part of the key: the estimate scales per-instruction
+        stalls by it (eq. 2), so the same binary at a different occupancy is
+        a different analysis.
+        """
+        key = (self.content_key(kernel), occupancy)
+        render = _guard(kernel)
+        hit = self._get(self._stalls, key, render)
+        if hit is not None:
+            return hit
+        from .predictor import estimate_stalls
+
+        val = estimate_stalls(kernel, occupancy)
+        self._put(self._stalls, key, render, val)
+        return val
+
+
+#: Process-wide cache shared by the benchmark harness, the predictor, and
+#: the translation service's predictor path.  Bounded: the harness working
+#: set is tiny, but the service path feeds this cache one stall-estimate
+#: entry per (kernel, occupancy) it predicts over, and a long-running
+#: service must not grow memory without bound.
+DEFAULT_SIM_CACHE = SimCache(max_entries=4096)
+
+
+def simulate_cached(
+    kernel: Kernel,
+    sm: SMConfig = MAXWELL,
+    max_cycles: int = 50_000_000,
+    cache: Optional[SimCache] = None,
+) -> SimResult:
+    """Content-cached :func:`~repro.core.simulator.simulate` (process-wide
+    :data:`DEFAULT_SIM_CACHE` unless a cache is supplied)."""
+    if cache is None:
+        cache = DEFAULT_SIM_CACHE
+    return cache.simulate(kernel, sm, max_cycles)
+
+
+def estimate_stalls_cached(
+    kernel: Kernel,
+    occupancy: float,
+    cache: Optional[SimCache] = None,
+) -> float:
+    """Content-cached :func:`~repro.core.predictor.estimate_stalls`."""
+    if cache is None:
+        cache = DEFAULT_SIM_CACHE
+    return cache.estimate_stalls(kernel, occupancy)

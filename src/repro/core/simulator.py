@@ -22,12 +22,35 @@ the ``trip_count`` metadata), one SM's resident warps at a time, and scales
 to the full launch by wave count.  Its absolute cycle counts are
 approximations; variant *ratios* (speedups) are the quantity of interest,
 mirroring how the paper reports Fig. 6.
+
+Engine architecture (two stages)
+--------------------------------
+
+:func:`simulate` runs a **trace compiler** followed by an **event-driven
+issue loop**:
+
+1. :func:`compile_trace` flattens the dynamic stream once and lowers every
+   *unique static instruction* to a flat numeric record — op-class index,
+   issue cost (stall + register-bank conflicts), scoreboard wait set,
+   write/read barrier index, and signal latencies.  The dynamic trace
+   becomes a list of record indices, so the hot loop touches no
+   :class:`~repro.core.isa.Instr` objects, no properties and no
+   generator expressions.
+2. :func:`_issue_loop` replays the exact scheduling semantics of the
+   original cycle-by-cycle engine over those records, caching each warp's
+   next-possible-issue time (it only changes when that warp issues — the
+   scoreboard is per-warp state) and skipping idle spans to the next event.
+
+The pre-optimization engine is preserved verbatim as
+:func:`simulate_reference`; the golden parity test pins
+``simulate() == simulate_reference()`` cycle-exactly across every paper
+benchmark × variant.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 from .isa import Instr, Kernel, Label, NUM_BARRIERS, OpClass
 from .occupancy import MAXWELL, Occupancy, SMConfig, occupancy_of
@@ -120,12 +143,223 @@ class SimResult:
     issue_stalls: int  # cycles where no warp could issue
 
 
+#: stable integer index per op class (trace-record encoding)
+_KLASS_INDEX: Dict[OpClass, int] = {k: i for i, k in enumerate(OpClass)}
+
+#: per-class issue interval, indexed by class index
+_KLASS_INTERVAL: List[float] = [ISSUE_INTERVAL[k] for k in OpClass]
+
+
+@dataclass
+class CompiledTrace:
+    """Stage 1 output: the dynamic stream lowered to flat numeric records.
+
+    ``code[i]`` indexes the record arrays for the i-th dynamic instruction;
+    every unique static instruction is lowered exactly once, so loops cost
+    one record however many times they expand.
+    """
+
+    code: List[int]              # dynamic stream -> record index
+    klass: List[int]             # op-class index (into _KLASS_INTERVAL)
+    cost: List[int]              # issue cost: max(1, stall) + bank conflicts
+    waits: List[Tuple[int, ...]]  # scoreboard barriers gating issue
+    write_bar: List[int]         # barrier signalled at result latency (-1: none)
+    read_bar: List[int]          # barrier signalled at operand read (-1: none)
+    write_lat: List[int]         # producer signal latency
+    read_lat: List[int]          # operand-read signal latency
+
+    def __len__(self) -> int:
+        return len(self.code)
+
+
+def compile_trace(trace: List[Instr]) -> CompiledTrace:
+    """Lower the dynamic stream to flat records (one per static instruction)."""
+    ct = CompiledTrace([], [], [], [], [], [], [], [])
+    rec_of: Dict[int, int] = {}
+    for ins in trace:
+        j = rec_of.get(ins.uid)
+        if j is None:
+            j = len(ct.klass)
+            rec_of[ins.uid] = j
+            ctrl = ins.ctrl
+            ct.klass.append(_KLASS_INDEX[ins.info.klass])
+            ct.cost.append(max(1, ctrl.stall) + ins.reg_bank_conflicts())
+            ct.waits.append(tuple(sorted(ctrl.wait)))
+            ct.write_bar.append(-1 if ctrl.write_bar is None else ctrl.write_bar)
+            ct.read_bar.append(-1 if ctrl.read_bar is None else ctrl.read_bar)
+            lat = _signal_latency(ins)
+            ct.write_lat.append(lat)
+            ct.read_lat.append(min(lat, 20))
+        ct.code.append(j)
+    return ct
+
+
+def _issue_loop(ct: CompiledTrace, n_warps: int, max_cycles: int) -> Tuple[float, int]:
+    """Stage 2: the event-driven issue loop; returns (cycles, idle_cycles).
+
+    Cycle-exact replay of the reference engine's semantics: warps round-robin
+    under an issue width of 4, per-class unit capacity gates issue, and a
+    cycle in which nothing issues jumps straight to the next warp-ready
+    event.  A warp's earliest issue time is cached — the scoreboard is
+    per-warp state, so it can only change when that warp itself issues; a
+    finished warp parks at ``inf``.
+    """
+    n_trace = len(ct.code)
+    if n_trace == 0:
+        return 0.0, 0
+    # per-dynamic-position record fields (one indirection instead of two)
+    code = ct.code
+    p_klass = [ct.klass[j] for j in code]
+    p_cost = [ct.cost[j] for j in code]
+    p_wbar = [ct.write_bar[j] for j in code]
+    p_rbar = [ct.read_bar[j] for j in code]
+    p_wlat = [ct.write_lat[j] for j in code]
+    p_rlat = [ct.read_lat[j] for j in code]
+    #: wait set of the *next* position (what the issuing warp blocks on);
+    #: empty tuple past the end
+    p_next_waits = [ct.waits[j] for j in code[1:]] + [()]
+    intervals = _KLASS_INTERVAL
+
+    pc = [0] * n_warps
+    bars = [[0.0] * NUM_BARRIERS for _ in range(n_warps)]
+    #: earliest cycle each warp can issue its next instruction (inf = done)
+    next_time = [0.0] * n_warps
+    n_done = 0
+    unit_free = [0.0] * len(intervals)
+    cycle = 0.0
+    idle_cycles = 0
+    rr = 0
+    inf = float("inf")
+
+    while n_done < n_warps and cycle < max_cycles:
+        issued = 0
+        cap = cycle + 1
+        for rot in (range(rr, n_warps), range(rr)):
+            for w in rot:
+                if next_time[w] > cycle:  # blocked, or done (parked at inf)
+                    continue
+                p = pc[w]
+                ki = p_klass[p]
+                uf = unit_free[ki]
+                # the unit blocks only once this cycle's capacity is spent
+                if uf >= cap:
+                    continue
+                # ---- issue -------------------------------------------------
+                issued += 1
+                unit_free[ki] = (uf if uf > cycle else cycle) + intervals[ki]
+                t = cycle + p_cost[p]
+                bw = bars[w]
+                b = p_wbar[p]
+                if b >= 0:
+                    bw[b] = cycle + p_wlat[p]
+                b = p_rbar[p]
+                if b >= 0:
+                    # operands are read shortly after issue
+                    bw[b] = cycle + p_rlat[p]
+                p += 1
+                pc[w] = p
+                if p >= n_trace:
+                    n_done += 1
+                    next_time[w] = inf
+                else:
+                    ws = p_next_waits[p - 1]
+                    if ws:
+                        for b in ws:
+                            v = bw[b]
+                            if v > t:
+                                t = v
+                    next_time[w] = t
+                if issued >= ISSUE_WIDTH:
+                    break
+            if issued >= ISSUE_WIDTH:
+                break
+        rr += 1
+        if rr >= n_warps:
+            rr = 0
+        if issued:
+            cycle += 1
+        else:
+            # Jump to the next time anything can happen.  Two distinct idle
+            # shapes, both replayed exactly as the reference engine counts
+            # them (done warps sit at inf; the loop guard ensures at least
+            # one warp is live):
+            #
+            # * no warp is ready: one reference iteration jumps straight to
+            #   the earliest warp-ready event (rr advances once);
+            # * some warp is ready but its unit is at capacity: the
+            #   reference crawls cycle-by-cycle (rr and idle advance per
+            #   cycle) until a unit frees (cycle + 1 > unit_free, i.e. at
+            #   floor(unit_free)) or another warp becomes ready — nothing
+            #   can issue in between, so the k crawl cycles collapse into
+            #   one iteration with rr += k and idle += k.
+            mn_wait = inf   # earliest blocked-warp ready time
+            mn_block = inf  # earliest unit-free event of a ready warp
+            for w in range(n_warps):
+                v = next_time[w]
+                if v <= cycle:
+                    v = float(int(unit_free[p_klass[pc[w]]]))
+                    if v < mn_block:
+                        mn_block = v
+                elif v < mn_wait:
+                    mn_wait = v
+            if mn_block < inf:
+                nxt = mn_block if mn_block < mn_wait else mn_wait
+                if nxt < cap:
+                    nxt = cap
+                elif nxt > max_cycles:
+                    # the reference crawls one cycle per iteration and stops
+                    # exactly at the cap — clamp the bulk jump likewise
+                    nxt = float(max_cycles)
+                k = int(nxt - cycle)
+                idle_cycles += k
+                rr += k - 1
+                rr %= n_warps
+            else:
+                nxt = mn_wait if mn_wait > cap else cap
+                idle_cycles += int(nxt - cycle)
+            cycle = nxt
+    return cycle, idle_cycles
+
+
 def simulate(
     kernel: Kernel,
     sm: SMConfig = MAXWELL,
     max_cycles: int = 50_000_000,
 ) -> SimResult:
-    """Simulate one wave of resident warps on one SM; scale by wave count."""
+    """Simulate one wave of resident warps on one SM; scale by wave count.
+
+    Two-stage engine: :func:`compile_trace` lowers the dynamic stream to
+    flat numeric records, :func:`_issue_loop` replays the scheduling
+    semantics event-to-event.  Cycle-exact with :func:`simulate_reference`.
+    """
+    occ = occupancy_of(kernel, sm)
+    trace = flatten_trace(kernel)
+    n_warps = max(occ.resident_warps, 1)
+    ct = compile_trace(trace)
+    cycle, idle_cycles = _issue_loop(ct, n_warps, max_cycles)
+
+    # fractional waves: charge the launch by work/throughput, not by rounding
+    # partial waves up (a 1.2-wave launch is not 2x a 1.0-wave launch)
+    blocks_per_wave = max(occ.resident_blocks, 1) * sm.num_sms
+    waves = kernel.num_blocks / blocks_per_wave
+    return SimResult(
+        kernel_name=kernel.name,
+        cycles_per_wave=int(cycle),
+        waves=max(1.0, waves),
+        total_cycles=int(cycle * max(1.0, waves)),
+        occupancy=occ,
+        dynamic_instructions=len(trace),
+        issue_stalls=idle_cycles,
+    )
+
+
+def simulate_reference(
+    kernel: Kernel,
+    sm: SMConfig = MAXWELL,
+    max_cycles: int = 50_000_000,
+) -> SimResult:
+    """The pre-optimization cycle-by-cycle engine, kept verbatim as the
+    parity oracle for :func:`simulate` (golden test: identical cycles)."""
     occ = occupancy_of(kernel, sm)
     trace = flatten_trace(kernel)
     n_warps = max(occ.resident_warps, 1)

@@ -13,10 +13,14 @@ returning the full :class:`TranslationReport` for inspection.
 
 Every variant is produced by the unified pass pipeline
 (:mod:`repro.core.passes`), which runs the schedule verifier and the
-dataflow-equivalence oracle after **every** pass; the container round-trip
-oracle then guards every emitted binary.  A translated binary that fails any
-of these is a translator bug, never a tolerated output.  Per-pass
-diagnostics/timings surface in :attr:`TranslationReport.pass_stats`.
+dataflow-equivalence oracle per its ``verify`` policy — the service hot
+path uses ``verify="final"`` (both checks once, after the last pass; output
+is byte-identical to ``verify="each"``, regression-tested), and
+``verify="each"`` remains available to fault-localize a broken pass; the
+container round-trip oracle then guards every emitted binary.  A translated
+binary that fails any of these is a translator bug, never a tolerated
+output.  Per-pass diagnostics/timings surface in
+:attr:`TranslationReport.pass_stats`.
 
 ``translate`` is the "automatic utility" of §3: it enumerates occupancy
 cliffs, generates a RegDem variant per (target x option-combination), and
@@ -126,6 +130,7 @@ def translate(
     target_regs: Optional[int] = None,
     options: Optional[List[RegDemOptions]] = None,
     use_predictor: bool = True,
+    verify: str = "final",
 ) -> Union[TranslationReport, bytes]:
     """Run the full pyReDe pipeline on one kernel.
 
@@ -134,6 +139,10 @@ def translate(
     pipeline binary->binary — over *every* kernel in the container — and
     returns the container bytes of the chosen variants, the paper's actual
     tool shape.
+
+    ``verify`` is the pass-pipeline self-check policy (default ``"final"``:
+    schedule + dataflow checks once per variant pipeline, byte-identical
+    output to ``"each"``).
     """
     if isinstance(kernel, (bytes, bytearray, memoryview)):
         out, _ = translate_binary(
@@ -141,6 +150,7 @@ def translate(
             target_regs=target_regs,
             options=options,
             use_predictor=use_predictor,
+            verify=verify,
         )
         return out
     targets = [target_regs] if target_regs is not None else auto_targets(kernel)
@@ -154,10 +164,10 @@ def translate(
         for opt in opts:
             label = f"regdem@{tgt}:{opt.label()}"
             # the pipeline self-checks schedule validity and dataflow
-            # equivalence after every pass (verify="each" inside demote);
-            # surface failures under the translator's exception type
+            # equivalence per the verify policy; surface failures under the
+            # translator's exception type
             try:
-                res = demote(kernel, tgt, opt)
+                res = demote(kernel, tgt, opt, verify=verify)
             except PassVerificationError as exc:
                 raise TranslationError(f"{label}: {exc}") from exc
             variants[label] = res.kernel
@@ -291,11 +301,15 @@ class TranslationService:
         options: Optional[List[RegDemOptions]] = None,
         use_predictor: bool = True,
         cache: Optional[TranslationCache] = None,
+        verify: str = "final",
     ):
         self.target_regs = target_regs
         self.options = options
         self.use_predictor = use_predictor
         self.cache = cache if cache is not None else TranslationCache()
+        #: pass-pipeline self-check policy ("final" on the serving hot path;
+        #: byte-identical output to "each" — regression-tested)
+        self.verify = verify
 
     def translate(self, data: bytes) -> Tuple[bytes, BatchTranslationReport]:
         """Container bytes in, container bytes out, every kernel translated."""
@@ -321,6 +335,7 @@ class TranslationService:
                     target_regs=self.target_regs,
                     options=self.options,
                     use_predictor=self.use_predictor,
+                    verify=self.verify,
                 )
                 chosen = kernel if report.chosen == "nvcc" else report.chosen_kernel
                 self.cache.put(key, kernel, chosen, report)
@@ -346,6 +361,7 @@ def translate_binary(
     options: Optional[List[RegDemOptions]] = None,
     use_predictor: bool = True,
     cache: Optional[TranslationCache] = None,
+    verify: str = "final",
 ) -> Tuple[bytes, Union[TranslationReport, BatchTranslationReport]]:
     """Binary->binary pyReDe: container bytes in, container bytes out.
 
@@ -364,6 +380,7 @@ def translate_binary(
         options=options,
         use_predictor=use_predictor,
         cache=cache,
+        verify=verify,
     )
     out, batch = service.translate(data)
     if len(batch.reports) == 1:
