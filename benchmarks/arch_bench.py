@@ -1,0 +1,111 @@
+"""Cross-architecture benchmarks: RegDem on every registered backend.
+
+For each Table-1 benchmark and each registered architecture, the kernel is
+ported to the arch (:func:`repro.arch.retarget` re-schedules it under that
+arch's machine model), demoted to its Table-1 register target, and graded
+on the timing simulator — a Table-3-style ``nvcc`` vs ``regdem`` result per
+architecture, plus a cross-arch occupancy comparison and per-arch container
+footprints (Volta's in-word control encoding trades bundle padding for a
+larger per-instruction record).
+
+Everything except the throughput row is deterministic, which is what lets
+``tests/test_arch.py`` pin a cross-arch demotion result against the
+committed ``BENCH_arch.json``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterator, Optional
+
+from repro.arch import arch_names, get_arch, retarget
+from repro.binary import dumps
+from repro.core.kernelgen import PAPER_BENCHMARKS, generate
+from repro.core.occupancy import occupancy_of
+from repro.core.regdem import demote
+from repro.core.simulator import simulate, speedup
+
+from ._util import write_json_atomic
+
+#: Default location of the machine-readable report (cwd-relative, i.e. the
+#: repo root under the documented ``python -m benchmarks.run`` invocation).
+JSON_PATH = "BENCH_arch.json"
+
+
+def arch_rows(json_path: Optional[str] = JSON_PATH) -> Iterator[str]:
+    """Yield CSV rows; write ``BENCH_arch.json`` as a side effect."""
+    archs = arch_names()
+    report: Dict[str, Dict] = {
+        "archs": {name: get_arch(name).describe() for name in archs},
+        "table3": {},
+        "occupancy": {},
+        "container": {},
+    }
+
+    t0 = time.perf_counter()
+    n_pipelines = 0
+    for bench, prof in PAPER_BENCHMARKS.items():
+        base = generate(prof)
+        report["table3"][bench] = {}
+        report["occupancy"][bench] = {}
+        report["container"][bench] = {}
+        for name in archs:
+            k = base if name == "maxwell" else retarget(base, name)
+            res = demote(k, prof.regdem_target, verify="final")
+            n_pipelines += 1
+            occ_before = occupancy_of(k)
+            occ_after = occupancy_of(res.kernel)
+            sim_nvcc = simulate(k)
+            sim_regdem = simulate(res.kernel)
+            spd = speedup(sim_nvcc, sim_regdem)
+            report["table3"][bench][name] = {
+                "baseline_regs": k.reg_count,
+                "target_regs": prof.regdem_target,
+                "demoted_words": res.demoted_words,
+                "regs_after": res.kernel.reg_count,
+                "demoted_smem_bytes": res.kernel.demoted_size,
+                "cycles_nvcc": sim_nvcc.total_cycles,
+                "cycles_regdem": sim_regdem.total_cycles,
+                "sim_speedup": round(spd, 4),
+            }
+            report["occupancy"][bench][name] = {
+                "before": round(occ_before.occupancy, 4),
+                "after": round(occ_after.occupancy, 4),
+                "limiter_before": occ_before.limiter,
+                "limiter_after": occ_after.limiter,
+            }
+            report["container"][bench][name] = {
+                "bytes": len(dumps(res.kernel)),
+                "instrs": len(res.kernel.instructions()),
+            }
+            yield (
+                f"arch_{name}_{bench},0.00,"
+                f"demoted={res.demoted_words};speedup={round(spd, 3)};"
+                f"occ={round(occ_before.occupancy, 3)}->{round(occ_after.occupancy, 3)}"
+            )
+    elapsed = time.perf_counter() - t0
+
+    report["timing"] = {
+        "pipelines": n_pipelines,
+        "seconds": round(elapsed, 3),
+        "pipelines_per_s": round(n_pipelines / elapsed, 2),
+    }
+    # headline cross-arch summary: geometric-mean speedup per arch
+    summary: Dict[str, float] = {}
+    for name in archs:
+        spds = [report["table3"][b][name]["sim_speedup"] for b in report["table3"]]
+        prod = 1.0
+        for s in spds:
+            prod *= s
+        summary[name] = round(prod ** (1 / len(spds)), 4)
+    report["geomean_speedup"] = summary
+
+    if json_path:
+        write_json_atomic(json_path, report)
+    for name in archs:
+        yield f"arch_geomean_{name},0.00,speedup={summary[name]}"
+    yield (
+        f"arch_corpus,{elapsed * 1e6 / n_pipelines:.1f},"
+        f"pipelines_per_s={report['timing']['pipelines_per_s']};"
+        f"archs={len(archs)}"
+    )

@@ -10,12 +10,13 @@ machine-readably across PRs.
 
 from __future__ import annotations
 
-import json
 import time
 from typing import Dict, Iterator, Optional
 
 from repro.binary import dumps, loads
 from repro.core.kernelgen import all_paper_kernels
+
+from ._util import write_json_atomic
 
 #: Default location of the machine-readable report (cwd-relative, i.e. the
 #: repo root under the documented ``python -m benchmarks.run`` invocation).
@@ -79,9 +80,7 @@ def binary_rows(json_path: Optional[str] = JSON_PATH) -> Iterator[str]:
         "bytes_per_instr": round(tot_bytes / tot_instrs, 2),
     }
     if json_path:
-        with open(json_path, "w") as fh:
-            json.dump({"kernels": report, "summary": summary}, fh, indent=2, sort_keys=True)
-            fh.write("\n")
+        write_json_atomic(json_path, {"kernels": report, "summary": summary})
     yield (
         f"binary_corpus,0.00,encode_ns={summary['encode_ns_per_instr']};"
         f"decode_ns={summary['decode_ns_per_instr']};"

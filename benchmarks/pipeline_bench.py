@@ -12,7 +12,6 @@ machine-readably across PRs.
 
 from __future__ import annotations
 
-import json
 import time
 from typing import Dict, Iterator, Optional
 
@@ -20,6 +19,8 @@ from repro.binary import dumps
 from repro.core.kernelgen import paper_kernel
 from repro.core.regdem import RegDemOptions
 from repro.core.translator import TranslationService
+
+from ._util import write_json_atomic
 
 #: Default location of the machine-readable report (cwd-relative, i.e. the
 #: repo root under the documented ``python -m benchmarks.run`` invocation).
@@ -90,9 +91,7 @@ def pipeline_rows(json_path: Optional[str] = JSON_PATH) -> Iterator[str]:
         "passes": passes,
     }
     if json_path:
-        with open(json_path, "w") as fh:
-            json.dump(report, fh, indent=2, sort_keys=True)
-            fh.write("\n")
+        write_json_atomic(json_path, report)
 
     b, c = report["batch"], report["cache"]
     yield (

@@ -14,6 +14,8 @@ Sections:
                 (writes BENCH_pipeline.json)
   sim           simulator-engine throughput + sim-cache behaviour vs the
                 recorded pre-optimization baseline     (writes BENCH_sim.json)
+  arch          cross-architecture Table-3 demotion results + occupancy
+                comparison over every registered arch  (writes BENCH_arch.json)
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 Some sections: ``... -m benchmarks.run --only fig6,fig7`` (comma-separated
@@ -34,7 +36,7 @@ def main() -> None:
         metavar="SECTION[,SECTION...]",
         help="run only these sections (comma-separated, repeatable): "
              "table1|fig6|fig7|fig8|fig9|roofline|tpu_selector|binary|"
-             "pipeline|sim",
+             "pipeline|sim|arch",
     )
     ap.add_argument("--binary-json", default=None, metavar="PATH",
                     help="where the binary section writes its JSON report "
@@ -45,9 +47,13 @@ def main() -> None:
     ap.add_argument("--sim-json", default=None, metavar="PATH",
                     help="where the sim section writes its JSON report "
                          "(default: BENCH_sim.json in the cwd)")
+    ap.add_argument("--arch-json", default=None, metavar="PATH",
+                    help="where the arch section writes its JSON report "
+                         "(default: BENCH_arch.json in the cwd)")
     args = ap.parse_args()
 
     from benchmarks import (
+        arch_bench,
         binary_bench,
         paper_figs,
         pipeline_bench,
@@ -65,6 +71,9 @@ def main() -> None:
     def sim_rows():
         return sim_bench.sim_rows(args.sim_json or sim_bench.JSON_PATH)
 
+    def arch_rows():
+        return arch_bench.arch_rows(args.arch_json or arch_bench.JSON_PATH)
+
     sections = {
         "table1": paper_figs.table1_occupancy,
         "fig6": paper_figs.fig6_speedups,
@@ -76,6 +85,7 @@ def main() -> None:
         "binary": binary_rows,
         "pipeline": pipeline_rows,
         "sim": sim_rows,
+        "arch": arch_rows,
     }
 
     selected = None

@@ -15,7 +15,6 @@ the service lean on it to avoid re-simulating identical kernels.
 
 from __future__ import annotations
 
-import json
 import time
 from typing import Iterator, Optional
 
@@ -23,6 +22,8 @@ from repro.core.kernelgen import PAPER_BENCHMARKS
 from repro.core.simcache import SimCache
 from repro.core.simulator import simulate
 from repro.core.variants import make_variants
+
+from ._util import write_json_atomic
 
 #: Default location of the machine-readable report (cwd-relative, i.e. the
 #: repo root under the documented ``python -m benchmarks.run`` invocation).
@@ -85,9 +86,7 @@ def sim_rows(json_path: Optional[str] = JSON_PATH) -> Iterator[str]:
         },
     }
     if json_path:
-        with open(json_path, "w") as fh:
-            json.dump(report, fh, indent=2, sort_keys=True)
-            fh.write("\n")
+        write_json_atomic(json_path, report)
 
     e, c = report["engine"], report["cache"]
     yield (

@@ -1,0 +1,146 @@
+"""CI perf-trend gate: compare fresh ``BENCH_*.json`` against baselines.
+
+The benchmark harness writes machine-readable reports (``BENCH_binary``,
+``BENCH_pipeline``, ``BENCH_sim``, ``BENCH_arch``); the repo commits them
+as the performance baseline.  This gate re-reads a freshly measured set and
+fails when a *headline* metric regressed beyond the tolerance — throughput
+metrics (kernels/s) may not drop more than ``--tolerance`` relative to the
+baseline, latency metrics (ns/instr) may not grow more than it, and cache
+hit rates may not fall more than it.  Improvements always pass (and are
+reported, so a stale baseline is visible in the job log).
+
+Usage (what ``.github/workflows/ci.yml`` runs)::
+
+    python -m benchmarks.run --only binary,pipeline,sim \
+        --binary-json fresh/BENCH_binary.json \
+        --pipeline-json fresh/BENCH_pipeline.json \
+        --sim-json fresh/BENCH_sim.json
+    python -m benchmarks.trend_gate --baseline-dir . --fresh-dir fresh
+
+Exit status: 0 = within tolerance, 1 = regression, 2 = missing/corrupt
+report (a truncated baseline would mean the atomic-write contract broke).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Iterator, List, Optional, Tuple
+
+#: (file, path-into-json, direction) per headline metric.  Direction:
+#: "higher" = regression when the fresh value drops below
+#: baseline*(1-tol); "lower" = regression when it grows above
+#: baseline*(1+tol).
+METRICS: List[Tuple[str, Tuple[str, ...], str]] = [
+    ("BENCH_binary.json", ("summary", "encode_ns_per_instr"), "lower"),
+    ("BENCH_binary.json", ("summary", "decode_ns_per_instr"), "lower"),
+    ("BENCH_pipeline.json", ("batch", "cold_kernels_per_s"), "higher"),
+    ("BENCH_pipeline.json", ("batch", "warm_kernels_per_s"), "higher"),
+    ("BENCH_pipeline.json", ("cache", "warm_hit_rate"), "higher"),
+    ("BENCH_sim.json", ("engine", "kernels_per_s"), "higher"),
+    ("BENCH_sim.json", ("cache", "warm_hit_rate"), "higher"),
+]
+
+DEFAULT_TOLERANCE = 0.30
+
+
+class GateError(RuntimeError):
+    """A report file is missing or unreadable."""
+
+
+def _load(path: str) -> dict:
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except FileNotFoundError:
+        raise GateError(f"missing report {path}") from None
+    except json.JSONDecodeError as exc:
+        raise GateError(f"corrupt report {path}: {exc}") from None
+
+
+def _lookup(report: dict, path: Tuple[str, ...], origin: str) -> float:
+    node = report
+    for key in path:
+        if not isinstance(node, dict) or key not in node:
+            raise GateError(f"{origin}: metric {'.'.join(path)} not found")
+        node = node[key]
+    if not isinstance(node, (int, float)):
+        raise GateError(f"{origin}: metric {'.'.join(path)} is not a number")
+    return float(node)
+
+
+def compare(
+    baseline_dir: str,
+    fresh_dir: str,
+    tolerance: float = DEFAULT_TOLERANCE,
+    metrics: Optional[List[Tuple[str, Tuple[str, ...], str]]] = None,
+) -> Iterator[Tuple[str, float, float, str]]:
+    """Yield ``(metric, baseline, fresh, verdict)`` per headline metric;
+    verdict is ``"ok"``, ``"improved"``, or ``"REGRESSED"``."""
+    cache: dict = {}
+    for fname, path, direction in metrics or METRICS:
+        for d in (baseline_dir, fresh_dir):
+            key = os.path.join(d, fname)
+            if key not in cache:
+                cache[key] = _load(key)
+        base = _lookup(cache[os.path.join(baseline_dir, fname)], path, f"baseline {fname}")
+        new = _lookup(cache[os.path.join(fresh_dir, fname)], path, f"fresh {fname}")
+        label = f"{fname}:{'.'.join(path)}"
+        if direction == "higher":
+            if new < base * (1 - tolerance):
+                verdict = "REGRESSED"
+            elif new > base * (1 + tolerance):
+                verdict = "improved"
+            else:
+                verdict = "ok"
+        else:
+            if new > base * (1 + tolerance):
+                verdict = "REGRESSED"
+            elif new < base * (1 - tolerance):
+                verdict = "improved"
+            else:
+                verdict = "ok"
+        yield label, base, new, verdict
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the committed BENCH_*.json baselines")
+    ap.add_argument("--fresh-dir", default="fresh",
+                    help="directory holding the freshly measured BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="relative tolerance before a change counts as a "
+                         "regression (default 0.30 = +-30%%)")
+    args = ap.parse_args(argv)
+
+    try:
+        rows = list(compare(args.baseline_dir, args.fresh_dir, args.tolerance))
+    except GateError as exc:
+        print(f"trend-gate error: {exc}", file=sys.stderr)
+        return 2
+
+    width = max(len(r[0]) for r in rows)
+    failed = False
+    for label, base, new, verdict in rows:
+        delta = (new - base) / base * 100 if base else float("inf")
+        print(f"{label:<{width}}  baseline={base:<10g} fresh={new:<10g} "
+              f"{delta:+7.1f}%  {verdict}")
+        failed = failed or verdict == "REGRESSED"
+    if failed:
+        print(
+            f"\nFAIL: headline metric regressed beyond +-{args.tolerance:.0%} "
+            "of the committed baseline.  If the change is intentional, rerun "
+            "`python -m benchmarks.run --only binary,pipeline,sim` and commit "
+            "the refreshed BENCH_*.json.",
+            file=sys.stderr,
+        )
+        return 1
+    print("\nOK: all headline metrics within tolerance of the committed baseline.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

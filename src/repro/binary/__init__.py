@@ -20,6 +20,13 @@ Modules
   equivalence + schedule validity + stable re-render)
 """
 
+from .archcodec import (
+    MAXWELL_CODEC,
+    VOLTA_CODEC,
+    MaxwellCodec,
+    TextCodec,
+    VoltaCodec,
+)
 from .container import (
     VERSION,
     ContainerError,
@@ -56,10 +63,15 @@ from .roundtrip import (
 __all__ = [
     "CTRL_BITS",
     "INSTR_RECORD_SIZE",
+    "MAXWELL_CODEC",
+    "VOLTA_CODEC",
     "VERSION",
     "ContainerError",
     "EncodingError",
+    "MaxwellCodec",
     "RoundTripError",
+    "TextCodec",
+    "VoltaCodec",
     "check_roundtrip",
     "decode_instr",
     "decode_text",

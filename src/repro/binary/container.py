@@ -27,14 +27,22 @@ opcode-table checksum, section bounds, declared vs. recomputed register
 count) is checked on load, so a corrupted or stale container fails loudly
 instead of producing a subtly wrong kernel.
 
-Format v2 (current) extends the v1 ``.kinfo`` record with a **per-kernel
-content CRC** — :func:`kernel_crc` over the kernel's name, launch metadata,
+Format v2 extends the v1 ``.kinfo`` record with a **per-kernel content
+CRC** — :func:`kernel_crc` over the kernel's name, launch metadata,
 tag/label tables, and text bytes.  It is the integrity check for each kernel
 of a multi-kernel container and the key of the translation cache
 (:class:`repro.core.translator.TranslationCache`): two kernels with equal
 CRCs translate to byte-identical output, so repeated kernels skip the pass
-pipeline entirely.  ``loads``/``loads_many`` accept v1 containers
-unchanged (no stored CRC, everything else identical).
+pipeline entirely.
+
+Format v3 (current) adds a **per-kernel architecture tag** — a strtab
+offset naming the :mod:`repro.arch` registry entry the kernel is encoded
+for.  The arch determines the text-section codec (Maxwell's bundled
+control words vs Volta/Turing's in-word control fields) and everything
+downstream (scheduler latencies, occupancy limits, spill budget).  v1 and
+v2 containers still load unchanged and default to the ``maxwell`` arch;
+writing v1/v2 is only possible for Maxwell kernels (older readers cannot
+represent any other arch).
 """
 
 from __future__ import annotations
@@ -48,8 +56,8 @@ from repro.core.isa import OPCODES, Kernel
 from . import encoding
 
 MAGIC = b"RDEMCBN\x01"
-VERSION = 2
-SUPPORTED_VERSIONS = (1, 2)
+VERSION = 3
+SUPPORTED_VERSIONS = (1, 2, 3)
 
 #: Section kinds (the ``kind`` column of the section table).
 SEC_NULL, SEC_STRTAB, SEC_KINFO, SEC_TEXT, SEC_LABELS = range(5)
@@ -62,7 +70,8 @@ _SEC = struct.Struct("<IIII")  # name_off, kind, offset, size
 _LBL = struct.Struct("<II")  # name_off, instr_idx
 _KINFO_V1 = struct.Struct("<IIIHHIIIIIHH16I32s32s")
 _KINFO_V2 = struct.Struct("<IIIHHIIIIIHH16I32s32sI")  # v1 + per-kernel CRC
-_KINFO_BY_VERSION = {1: _KINFO_V1, 2: _KINFO_V2}
+_KINFO_V3 = struct.Struct("<IIIHHIIIIIHH16I32s32sII")  # v2 + arch name off
+_KINFO_BY_VERSION = {1: _KINFO_V1, 2: _KINFO_V2, 3: _KINFO_V3}
 KINFO_SIZES = {v: s.size for v, s in _KINFO_BY_VERSION.items()}
 KINFO_SIZE = KINFO_SIZES[VERSION]
 _NONE16 = 0xFFFF
@@ -71,6 +80,20 @@ _MAX_TAGS = 16
 
 class ContainerError(ValueError):
     """Raised on malformed, corrupted, or incompatible container bytes."""
+
+
+def _get_arch(name: str):
+    """Resolve an arch descriptor, mapping unknown names to ContainerError.
+
+    Lazy import: :mod:`repro.arch` pulls in the codec modules of this
+    package, so the registry is resolved at call time, not import time.
+    """
+    from repro.arch import ArchError, get_arch
+
+    try:
+        return get_arch(name)
+    except ArchError as exc:
+        raise ContainerError(str(exc)) from None
 
 
 def opcode_checksum() -> int:
@@ -92,13 +115,18 @@ def _content_crc(
     tags: Sequence[str],
     labels: Sequence[Tuple[str, int]],
     text: bytes,
+    arch: str = "maxwell",
 ) -> int:
     """The per-kernel content CRC over everything translation can observe.
 
     Computed from *resolved* strings (never strtab offsets), so the value is
     independent of section layout, sibling kernels, and container version —
-    which is what makes it usable as the translation-cache key."""
+    which is what makes it usable as the translation-cache key.  The arch
+    tag is mixed in only off-default so that Maxwell CRCs stay identical to
+    their historical v2 values (cache keys survive the v3 upgrade)."""
     h = zlib.crc32(name.encode("utf-8"))
+    if arch != "maxwell":
+        h = zlib.crc32(b"arch:" + arch.encode("utf-8") + b"\x00", h)
     h = zlib.crc32(
         struct.pack("<IIIIIH", threads, blocks, shared, demoted, reg_count, rda_enc), h
     )
@@ -112,11 +140,13 @@ def _content_crc(
 
 
 def kernel_crc(kernel: Kernel) -> int:
-    """Content CRC of one kernel — what a v2 container stores in ``.kinfo``
+    """Content CRC of one kernel — what a v2+ container stores in ``.kinfo``
     and what keys the translation cache.  Equal CRCs mean the binary
     translator produces byte-identical output."""
+    arch = getattr(kernel, "arch", "maxwell")
+    codec = _get_arch(arch).codec
     tags = encoding.collect_tags(kernel.items)
-    text, labels = encoding.encode_text(kernel.items, tags)
+    text, labels = encoding.encode_text(kernel.items, tags, codec=codec)
     return _content_crc(
         kernel.name,
         kernel.threads_per_block,
@@ -130,6 +160,7 @@ def kernel_crc(kernel: Kernel) -> int:
         tags,
         labels,
         text,
+        arch,
     )
 
 
@@ -173,8 +204,9 @@ class _StrTab:
 def dumps(kernels: Union[Kernel, Iterable[Kernel]], version: int = VERSION) -> bytes:
     """Serialize one kernel (or an iterable of kernels) to container bytes.
 
-    ``version`` selects the container format (v2 default; v1 writes the
-    legacy record without per-kernel CRCs, for interop tests)."""
+    ``version`` selects the container format (v3 default; v1/v2 write the
+    legacy records — no arch tag, v1 also no per-kernel CRC — for interop
+    tests, and can only represent Maxwell kernels)."""
     if version not in SUPPORTED_VERSIONS:
         raise ContainerError(f"cannot write container version {version}")
     klist = [kernels] if isinstance(kernels, Kernel) else list(kernels)
@@ -187,8 +219,23 @@ def dumps(kernels: Union[Kernel, Iterable[Kernel]], version: int = VERSION) -> b
     kinfo_records: List[bytes] = []
 
     for kernel in klist:
+        # the tag is stored VERBATIM (aliases like "turing" included) so the
+        # decoded kernel round-trips render- and byte-identically; behaviour
+        # always resolves through the registry, which knows the aliases
+        arch_name = getattr(kernel, "arch", "maxwell")
+        arch = _get_arch(arch_name)
+        if version < 3 and arch_name != "maxwell":
+            # pre-v3 containers have no arch field: a legacy reader would
+            # load this kernel as literal "maxwell", silently dropping the
+            # tag (and, for v2, invalidating the stored CRC) — so even
+            # maxwell *aliases* like "pascal" require v3
+            raise ContainerError(
+                f"kernel {kernel.name}: container version {version} cannot "
+                f"represent arch {arch_name!r} (v3 required)"
+            )
+        codec = arch.codec
         tags = encoding.collect_tags(kernel.items)
-        text, labels = encoding.encode_text(kernel.items, tags)
+        text, labels = encoding.encode_text(kernel.items, tags, codec=codec)
         text_sec = len(sections) + 1  # +1: .kinfo is inserted at index 1
         sections.append((f".text.{kernel.name}", SEC_TEXT, text))
         lbl_blob = b"".join(
@@ -231,8 +278,11 @@ def dumps(kernels: Union[Kernel, Iterable[Kernel]], version: int = VERSION) -> b
                 tags,
                 labels,
                 text,
+                arch_name,
             )
             fields = fields + (crc,)
+        if version >= 3:
+            fields = fields + (strtab.add(arch_name),)
         kinfo_records.append(_KINFO_BY_VERSION[version].pack(*fields))
 
     sections.insert(1, (".kinfo", SEC_KINFO, b"".join(kinfo_records)))
@@ -328,6 +378,11 @@ def loads_many(data: bytes) -> List[Kernel]:
         tag_offs = rec[12:28]
         live_in_mask, live_out_mask = rec[28], rec[29]
         stored_crc = rec[30] if version >= 2 else None
+        # pre-v3 containers predate the arch registry: always Maxwell.  The
+        # stored tag (possibly an alias) is preserved verbatim on the kernel
+        # so dump/load/dump is byte-identity; the descriptor resolves it.
+        arch_name = _StrTab.read(strtab, rec[31]) if version >= 3 else "maxwell"
+        arch = _get_arch(arch_name)
         if not 0 < n_tags <= _MAX_TAGS:
             raise ContainerError(f"bad tag-table size {n_tags}")
         tags = [_StrTab.read(strtab, off) for off in tag_offs[:n_tags]]
@@ -352,6 +407,7 @@ def loads_many(data: bytes) -> List[Kernel]:
             recomputed = _content_crc(
                 name, threads, blocks, shared, demoted, reg_count, rda,
                 live_in_mask, live_out_mask, tags, labels, sections[text_sec][2],
+                arch_name,
             )
             if recomputed != stored_crc:
                 raise ContainerError(
@@ -359,7 +415,9 @@ def loads_many(data: bytes) -> List[Kernel]:
                     f"(stored {stored_crc:#010x}, recomputed {recomputed:#010x})"
                 )
 
-        items = encoding.decode_text(sections[text_sec][2], n_instrs, labels, tags)
+        items = encoding.decode_text(
+            sections[text_sec][2], n_instrs, labels, tags, codec=arch.codec
+        )
         kernel = Kernel(
             name=name,
             items=items,
@@ -370,6 +428,7 @@ def loads_many(data: bytes) -> List[Kernel]:
             live_in=_unmask(live_in_mask),
             live_out=_unmask(live_out_mask),
             rda=None if rda == _NONE16 else rda,
+            arch=arch_name,
         )
         if kernel.reg_count != reg_count:
             raise ContainerError(

@@ -38,7 +38,8 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.isa import OPCODES, Instr, Label
 
-from .ctrlwords import BUNDLE_GROUP, pack_stream, unpack_stream
+from .archcodec import MAXWELL_CODEC, RECORD_SIZE as _CODEC_RECORD_SIZE, TextCodec
+from .ctrlwords import BUNDLE_GROUP
 
 #: Stable opcode numbering: insertion order of the ISA opcode table.
 OPCODE_IDS: Dict[str, int] = {name: i for i, name in enumerate(OPCODES)}
@@ -57,7 +58,7 @@ DEFAULT_TAGS: Tuple[str, ...] = (
 
 _REC = struct.Struct("<BBBBBBBBIHHd")
 INSTR_RECORD_SIZE = _REC.size  # 24
-assert INSTR_RECORD_SIZE == 24
+assert INSTR_RECORD_SIZE == 24 == _CODEC_RECORD_SIZE
 
 #: Bytes of one text-section group: control bundle + three records.
 GROUP_SIZE = 8 + BUNDLE_GROUP * INSTR_RECORD_SIZE
@@ -212,6 +213,7 @@ def collect_tags(items: Sequence[object]) -> List[str]:
 def encode_text(
     items: Sequence[object],
     tags: Optional[Sequence[str]] = None,
+    codec: Optional[TextCodec] = None,
 ) -> Tuple[bytes, List[Tuple[str, int]]]:
     """Encode an item stream (instructions + labels) into a text section.
 
@@ -220,9 +222,14 @@ def encode_text(
     first instruction *after* the label (``n_instrs`` for trailing labels).
     Labels live in the container's label section, not in the text bytes —
     exactly how a cubin keeps symbols out of ``.text``.
+
+    ``codec`` chooses the architecture's text layout (control-word packing
+    and record geometry; default: Maxwell's bundled layout).
     """
     if tags is None:
         tags = collect_tags(items)
+    if codec is None:
+        codec = MAXWELL_CODEC
     instrs = [it for it in items if isinstance(it, Instr)]
     labels: List[Tuple[str, int]] = []
     pos = 0
@@ -238,17 +245,8 @@ def encode_text(
         label_index.setdefault(name, i)
 
     records = [encode_instr(ins, label_index, tags) for ins in instrs]
-    bundles = pack_stream(ins.ctrl for ins in instrs)
-
-    out = bytearray()
-    for g, bundle in enumerate(bundles):
-        out += struct.pack("<Q", bundle)
-        for rec in records[g * BUNDLE_GROUP : (g + 1) * BUNDLE_GROUP]:
-            out += rec
-        # pad the trailing group so every group is GROUP_SIZE bytes
-        short = BUNDLE_GROUP - len(records[g * BUNDLE_GROUP : (g + 1) * BUNDLE_GROUP])
-        out += b"\x00" * (short * INSTR_RECORD_SIZE)
-    return bytes(out), labels
+    out = codec.encode_text_section(records, [ins.ctrl for ins in instrs])
+    return out, labels
 
 
 def decode_text(
@@ -256,25 +254,22 @@ def decode_text(
     n_instrs: int,
     labels: Sequence[Tuple[str, int]],
     tags: Sequence[str] = DEFAULT_TAGS,
+    codec: Optional[TextCodec] = None,
 ) -> List[object]:
     """Decode a text section back into the item stream (inverse of
     :func:`encode_text`)."""
-    n_groups = (n_instrs + BUNDLE_GROUP - 1) // BUNDLE_GROUP
-    if len(data) != n_groups * GROUP_SIZE:
+    if codec is None:
+        codec = MAXWELL_CODEC
+    if len(data) != codec.text_size(n_instrs):
         raise EncodingError(
-            f"text section is {len(data)} bytes; "
-            f"{n_instrs} instructions need {n_groups * GROUP_SIZE}"
+            f"text section is {len(data)} bytes; {n_instrs} instructions "
+            f"need {codec.text_size(n_instrs)} ({codec.name} layout)"
         )
-    bundles = [
-        struct.unpack_from("<Q", data, g * GROUP_SIZE)[0] for g in range(n_groups)
-    ]
-    ctrls = unpack_stream(bundles, n_instrs)
+    ctrls, records = codec.decode_text_section(data, n_instrs)
     label_names = [name for name, _ in labels]
     instrs: List[Instr] = []
     for i in range(n_instrs):
-        g, slot = divmod(i, BUNDLE_GROUP)
-        off = g * GROUP_SIZE + 8 + slot * INSTR_RECORD_SIZE
-        ins = decode_instr(data[off : off + INSTR_RECORD_SIZE], label_names, tags)
+        ins = decode_instr(records[i], label_names, tags)
         ins.ctrl = ctrls[i]
         instrs.append(ins)
 
@@ -291,7 +286,7 @@ def decode_text(
     return items
 
 
-def instr_addr(index: int) -> int:
-    """Byte offset of instruction ``index`` within its text section."""
-    g, slot = divmod(index, BUNDLE_GROUP)
-    return g * GROUP_SIZE + 8 + slot * INSTR_RECORD_SIZE
+def instr_addr(index: int, codec: Optional[TextCodec] = None) -> int:
+    """Byte offset of instruction ``index`` within its text section
+    (Maxwell's bundled layout unless another arch codec is given)."""
+    return (codec or MAXWELL_CODEC).instr_addr(index)

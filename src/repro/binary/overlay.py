@@ -19,8 +19,7 @@ from typing import List, Union
 
 from repro.core.isa import Ctrl, Instr, Kernel, Label
 
-from .ctrlwords import pack_ctrl
-from .encoding import instr_addr
+from .archcodec import MAXWELL_CODEC
 
 
 def format_ctrl_columns(ctrl: Ctrl) -> str:
@@ -45,15 +44,23 @@ def _strip_ctrl_comment(rendered: str) -> str:
 
 
 def overlay_lines(kernel: Union[Kernel, List[object]]) -> List[str]:
-    """Annotated disassembly lines for a kernel (or raw item list)."""
+    """Annotated disassembly lines for a kernel (or raw item list).
+
+    Addresses and packed control words follow the kernel's architecture
+    codec (raw item lists use the Maxwell layout)."""
     items = kernel.items if isinstance(kernel, Kernel) else kernel
+    codec = MAXWELL_CODEC
     lines: List[str] = []
     if isinstance(kernel, Kernel):
+        from repro.arch import arch_of
+
+        codec = arch_of(kernel).codec
+        arch_tag = "" if kernel.arch == "maxwell" else f"arch={kernel.arch} "
         lines.append(
             f"// kernel {kernel.name}  regs={kernel.reg_count} "
             f"threads/block={kernel.threads_per_block} "
             f"smem={kernel.shared_size}+{kernel.demoted_size}B "
-            f"ctrl=[stall Y | WR RD wait]"
+            f"{arch_tag}ctrl=[stall Y | WR RD wait]"
         )
     body_width = max(
         (len(_strip_ctrl_comment(it.render())) for it in items if isinstance(it, Instr)),
@@ -66,8 +73,8 @@ def overlay_lines(kernel: Union[Kernel, List[object]]) -> List[str]:
             continue
         body = _strip_ctrl_comment(it.render())
         lines.append(
-            f"/*{instr_addr(idx):04x}*/ {body:<{body_width}s}  "
-            f"{format_ctrl_columns(it.ctrl)} /*{pack_ctrl(it.ctrl):06x}*/"
+            f"/*{codec.instr_addr(idx):04x}*/ {body:<{body_width}s}  "
+            f"{format_ctrl_columns(it.ctrl)} /*{codec.pack_ctrl(it.ctrl):06x}*/"
         )
         idx += 1
     return lines

@@ -23,12 +23,21 @@ Faithful-reproduction layer:
 * :mod:`repro.core.translator`  pyReDe driver: batch, cached, multi-kernel
                                  binary-translation service
 
+Architecture registry (see README.md "Architectures"):
+
+* :mod:`repro.arch`  per-arch descriptors (SMConfig, codec, latencies,
+                     banking) resolved from each kernel's ``arch`` tag;
+                     ships Maxwell/Pascal and Volta/Turing backends
+
 Binary substrate (the pseudo-cubin layer the translator runs on; see
 README.md "Binary container format"):
 
 * :mod:`repro.binary.ctrlwords`  21-bit Maxwell control-word packing
+* :mod:`repro.binary.archcodec`  per-arch text codecs (Maxwell bundles,
+                                 Volta/Turing in-word control fields)
 * :mod:`repro.binary.encoding`   fixed-width instruction records
-* :mod:`repro.binary.container`  pseudo-cubin ``dumps``/``loads``
+* :mod:`repro.binary.container`  pseudo-cubin ``dumps``/``loads`` (v3:
+                                 per-kernel arch tag)
 * :mod:`repro.binary.overlay`    SASSOverlay-style annotated disassembly
 * :mod:`repro.binary.roundtrip`  encode/decode self-check oracle
 

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Set
 
-from .isa import Kernel, reg_bank
+from .isa import Kernel
 from .candidates import width_map
 
 NUM_BANK_WINDOW = 4  # swapping window for the bank-aware variant (§3.4.1)
@@ -49,6 +49,11 @@ class RelocationSpace:
     which "prevents the algorithm from breaking register aliases"."""
 
     def __init__(self, kernel: Kernel):
+        from repro.arch import arch_of
+
+        #: arch banking for the §3.4.1 bank-aware fill (Maxwell: reg % 4,
+        #: Volta: reg % 2) — must match the model charging the conflicts
+        self.reg_bank = arch_of(kernel).reg_bank
         widths = folded_widths(kernel)
         self.pinned: Set[int] = set(kernel.live_in) | set(kernel.live_out)
         top = max(widths) + max(widths.values(), default=1) if widths else 0
@@ -217,7 +222,7 @@ class RelocationSpace:
             r = self.slots[pos]
             if r is not None and pos == self._lead(pos) and r not in self.pinned:
                 seen += 1
-                if self.width[r] == 1 and reg_bank(pos) == reg_bank(gap):
+                if self.width[r] == 1 and self.reg_bank(pos) == self.reg_bank(gap):
                     self.place(pos, gap)
                     return True
             pos += 1

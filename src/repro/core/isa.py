@@ -459,6 +459,10 @@ class Kernel:
     live_out: Set[int] = field(default_factory=set)
     #: RDA register (demoted base address) once RegDem reserved it
     rda: Optional[int] = None
+    #: target architecture, a :mod:`repro.arch` registry name.  Everything
+    #: arch-specific (codec, scheduler latencies, occupancy limits, spill
+    #: budget) resolves through this tag.
+    arch: str = "maxwell"
 
     # -- basic queries --------------------------------------------------------
 
@@ -493,6 +497,7 @@ class Kernel:
             live_in=set(self.live_in),
             live_out=set(self.live_out),
             rda=self.rda,
+            arch=self.arch,
         )
         for it in self.items:
             if isinstance(it, Instr):
@@ -510,10 +515,13 @@ class Kernel:
         return k
 
     def render(self) -> str:
+        # the arch tag is printed only off-default so that Maxwell kernels
+        # render byte-identically to the pre-registry layout
+        arch_tag = "" if self.arch == "maxwell" else f" arch={self.arch}"
         lines = [
             f"// kernel {self.name}  regs={self.reg_count} "
             f"threads/block={self.threads_per_block} smem={self.shared_size}"
-            f"+{self.demoted_size}B"
+            f"+{self.demoted_size}B{arch_tag}"
         ]
         for it in self.items:
             pad = "" if isinstance(it, Label) else "    "
@@ -563,7 +571,11 @@ def parse_kernel(text: str, **kernel_kwargs) -> Kernel:
         line = raw.strip()
         if not line or line.startswith("//"):
             if line.startswith("// kernel"):
-                k.name = line.split()[2]
+                toks = line.split()
+                k.name = toks[2]
+                for tok in toks[3:]:
+                    if tok.startswith("arch="):
+                        k.arch = tok[len("arch="):]
             continue
         if line.endswith(":") and not line.startswith("/*"):
             k.items.append(Label(line[:-1]))

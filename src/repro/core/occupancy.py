@@ -92,8 +92,13 @@ def occupancy(
     )
 
 
-def occupancy_of(kernel, sm: SMConfig = MAXWELL) -> Occupancy:
-    """Occupancy of a :class:`repro.core.isa.Kernel`."""
+def occupancy_of(kernel, sm: SMConfig | None = None) -> Occupancy:
+    """Occupancy of a :class:`repro.core.isa.Kernel` under its own
+    architecture's SM limits (override with ``sm``)."""
+    if sm is None:
+        from repro.arch import arch_of
+
+        sm = arch_of(kernel).sm
     return occupancy(
         kernel.reg_count, kernel.threads_per_block, kernel.total_shared, sm
     )

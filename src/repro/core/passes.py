@@ -36,15 +36,10 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 from .candidates import make_candidates, operand_conflicts
 from .compaction import compact, packed_reg_count
 from .isa import (
-    GL_MEM_STALL,
-    NUM_BARRIERS,
-    NUM_REG_BANKS,
     RZ,
-    SH_MEM_STALL,
     Instr,
     Kernel,
     Label,
-    OpClass,
     equivalent,
 )
 from .sched import _blocks, fixup_stalls, repair_war, verify_block
@@ -168,6 +163,11 @@ class PassContext:
         self.space = space
         self.options = options or RegDemOptions()
         self.target = target
+        #: the kernel's architecture descriptor — parameterizes barrier
+        #: tracking, register banking, and the spill budget for every pass
+        from repro.arch import arch_of
+
+        self.arch = arch_of(kernel)
         #: register count at which spilling stops; RegDem clamps to
         #: REG_FLOOR (no occupancy benefit below 32), the aggressive
         #: allocator honours the raw target like nvcc does
@@ -279,7 +279,7 @@ class PassPipeline:
         for i, (block, sig) in enumerate(zip(blocks, sigs)):
             if old is not None and i < len(old) and old[i] == sig:
                 continue
-            errs = verify_block(block)
+            errs = verify_block(block, ctx.arch.num_barriers)
             if errs:
                 ctx._sched_sigs = None
                 raise PassVerificationError(
@@ -305,14 +305,23 @@ class PassPipeline:
 
 class BarrierTracker:
     """Tracks which instruction last set each scoreboard barrier and the
-    stall cycles elapsed since, to hand out the least-costly barrier."""
+    stall cycles elapsed since, to hand out the least-costly barrier.
 
-    def __init__(self) -> None:
-        self.slots: List[Optional[List]] = [None] * NUM_BARRIERS
+    ``arch`` supplies the barrier count and the residual-latency table
+    (``None`` = Maxwell)."""
+
+    def __init__(self, arch=None) -> None:
+        if arch is None:
+            from repro.arch import get_arch
+
+            arch = get_arch("maxwell")
+        self.arch = arch
+        self.num_barriers = arch.num_barriers
+        self.slots: List[Optional[List]] = [None] * self.num_barriers
 
     def reset(self) -> None:
         """Barriers cannot span basic blocks (cleared before jumps)."""
-        self.slots = [None] * NUM_BARRIERS
+        self.slots = [None] * self.num_barriers
 
     def get_barrier(self, setter: Instr) -> int:
         """Fig. 3 ``GetBarrier``: a free barrier, else the one whose pending
@@ -322,19 +331,14 @@ class BarrierTracker:
         it — this is the "additional stalls" the paper describes, made
         explicit so the schedule verifier and simulator see the true cost.
         """
-        for b in range(NUM_BARRIERS):
+        for b in range(self.num_barriers):
             if self.slots[b] is None:
                 self.slots[b] = [setter, 0]
                 return b
-        best_b, best_stall = None, GL_MEM_STALL + 1
-        for b in range(NUM_BARRIERS):
+        best_b, best_stall = None, self.arch.latency.global_mem + 1
+        for b in range(self.num_barriers):
             inst, elapsed = self.slots[b]
-            if inst.info.klass is OpClass.LSU_GLOBAL or inst.info.klass is OpClass.LSU_LOCAL:
-                residual = GL_MEM_STALL - elapsed
-            elif inst.info.klass is OpClass.LSU_SHARED:
-                residual = SH_MEM_STALL - elapsed
-            else:
-                residual = inst.info.klass.latency - elapsed
+            residual = self.arch.residual_latency(inst.info.klass) - elapsed
             if residual < best_stall:
                 best_b, best_stall = b, residual
         setter.ctrl.wait.add(best_b)
@@ -351,7 +355,7 @@ class BarrierTracker:
             self.slots[inst.ctrl.read_bar] = [inst, 0]
         if inst.ctrl.write_bar is not None:
             self.slots[inst.ctrl.write_bar] = [inst, 0]
-        for b in range(NUM_BARRIERS):
+        for b in range(self.num_barriers):
             if self.slots[b] is not None and self.slots[b][0] is not inst:
                 self.slots[b][1] += inst.ctrl.stall
 
@@ -361,14 +365,25 @@ class BarrierTracker:
 # ---------------------------------------------------------------------------
 
 
-def choose_rdv_bank(kernel: Kernel, candidates: Sequence[Tuple[int, int]], wide: bool) -> int:
+def choose_rdv_bank(
+    kernel: Kernel,
+    candidates: Sequence[Tuple[int, int]],
+    wide: bool,
+    arch=None,
+) -> int:
     """Pick the register bank for RDV minimizing same-instruction conflicts.
 
     For every instruction that touches a candidate register, count the source
-    operands (post-rename survivors) that would share RDV's bank.
+    operands (post-rename survivors) that would share RDV's bank.  Banking
+    comes from the architecture (Maxwell: 4 banks, even banks for pairs;
+    Volta: 2 banks, pairs pinned to bank 0).
     """
+    if arch is None:
+        from repro.arch import arch_of
+
+        arch = arch_of(kernel)
     cand_regs = {r for r, _ in candidates}
-    banks = [0, 2] if wide else [0, 1, 2, 3]
+    banks = arch.rdv_banks(wide)
     scores = {b: 0 for b in banks}
     for ins in kernel.instructions():
         touched = [r for r in ins.leading_regs() if r in cand_regs]
@@ -376,7 +391,7 @@ def choose_rdv_bank(kernel: Kernel, candidates: Sequence[Tuple[int, int]], wide:
             continue
         others = [r for r in ins.src_words() if r not in cand_regs and r != RZ]
         for b in banks:
-            scores[b] += sum(1 for r in others if r % 4 == b)
+            scores[b] += sum(1 for r in others if arch.reg_bank(r) == b)
     return min(banks, key=lambda b: (scores[b], b))
 
 
@@ -401,7 +416,9 @@ def demote_register(
     shared space (``LDS``/``STS``, rda=tid*4) realizes RegDem's demotion;
     local space (``LDL``/``STL``, rda=RZ) realizes nvcc-style local-memory
     spilling for the comparison variants (§5.3)."""
-    tracker = BarrierTracker()
+    from repro.arch import arch_of
+
+    tracker = BarrierTracker(arch_of(k))
     new_items: List[object] = []
     #: waits to attach to the next real instruction (line 18-19 of Fig. 3)
     pending_next_wait: Set[int] = set()
@@ -575,10 +592,10 @@ class ReserveRegistersPass(Pass):
         if wide and base % 2:
             base += 1  # RDV must be even-numbered for pair demotion (§3.2)
         if self.bank_tune and ctx.options.bank_avoid:
-            want_bank = choose_rdv_bank(k, ctx.candidates, wide)
+            want_bank = choose_rdv_bank(k, ctx.candidates, wide, ctx.arch)
             rdv = base
             step = 2 if wide else 1
-            while rdv % NUM_REG_BANKS != want_bank:
+            while ctx.arch.reg_bank(rdv) != want_bank:
                 rdv += step
         else:
             rdv = base

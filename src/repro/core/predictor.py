@@ -26,47 +26,40 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from .isa import (
     CFG,
-    GL_MEM_STALL,
-    MAX_THROUGHPUT,
-    NUM_BARRIERS,
-    SH_MEM_STALL,
     Instr,
     Kernel,
-    OpClass,
 )
-from .occupancy import MAXWELL, SMConfig, occupancy_of
+from .occupancy import SMConfig, occupancy_of
 
 #: generic loop weight (paper §4 step two)
 LOOP_FACTOR = 10
 
 
-def _throughput_ratio(ins: Instr) -> float:
-    """MAX_THROUGHPUT / inst_throughput (eq. 2 contention term)."""
-    return MAX_THROUGHPUT / ins.info.klass.throughput
+def _arch_of(kernel: Kernel):
+    from repro.arch import arch_of
 
-
-def _mem_latency(ins: Instr) -> Optional[int]:
-    k = ins.info.klass
-    if k in (OpClass.LSU_GLOBAL, OpClass.LSU_LOCAL):
-        return GL_MEM_STALL
-    if k is OpClass.LSU_SHARED:
-        return SH_MEM_STALL
-    return None
+    return arch_of(kernel)
 
 
 def estimate_stalls(kernel: Kernel, occupancy: Optional[float] = None) -> float:
-    """Fig. 5: whole-program stall estimate at the given occupancy."""
+    """Fig. 5: whole-program stall estimate at the given occupancy.
+
+    The contention term (eq. 2), the barrier residual latencies, and the
+    register banking come from the kernel's architecture."""
+    arch = _arch_of(kernel)
     if occupancy is None:
-        occupancy = occupancy_of(kernel).occupancy
+        occupancy = occupancy_of(kernel, arch.sm).occupancy
     cfg = CFG(kernel)
     block_stall: Dict[int, float] = {}
 
     for blk in cfg.blocks:
         stall = 0.0
-        tracker: List[Optional[Tuple[Instr, float]]] = [None] * NUM_BARRIERS
+        tracker: List[Optional[Tuple[Instr, float]]] = [None] * arch.num_barriers
         for ins in blk.instrs:
-            inst_stall = ins.ctrl.stall * occupancy * _throughput_ratio(ins)
-            inst_stall += ins.reg_bank_conflicts()
+            inst_stall = (
+                ins.ctrl.stall * occupancy * arch.throughput_ratio(ins.info.klass)
+            )
+            inst_stall += arch.bank_conflicts(ins)
             # barrier bookkeeping (lines 7-12)
             if ins.ctrl.read_bar is not None:
                 tracker[ins.ctrl.read_bar] = (ins, 0.0)
@@ -77,14 +70,12 @@ def estimate_stalls(kernel: Kernel, occupancy: Optional[float] = None) -> float:
                 if tracker[b] is None:
                     continue
                 setter, elapsed = tracker[b]
-                lat = _mem_latency(setter)
-                if lat is None:
-                    lat = setter.info.klass.latency
+                lat = arch.residual_latency(setter.info.klass)
                 if elapsed < lat:
                     stall += lat - elapsed
                 tracker[b] = None
             # elapse (lines 20-21)
-            for b in range(NUM_BARRIERS):
+            for b in range(arch.num_barriers):
                 if tracker[b] is not None:
                     tracker[b] = (tracker[b][0], tracker[b][1] + inst_stall)
             stall += inst_stall
@@ -216,7 +207,7 @@ def _launch_occupancy(kernel: Kernel, sm: SMConfig) -> float:
 
 def predict(
     variants: Dict[str, Kernel],
-    sm: SMConfig = MAXWELL,
+    sm: Optional[SMConfig] = None,
     curve: Optional[Sequence[Tuple[float, float]]] = None,
     option_rank: Optional[Dict[str, int]] = None,
 ) -> Tuple[str, List[Prediction]]:
@@ -224,11 +215,16 @@ def predict(
 
     ``option_rank`` breaks ties toward more enabled performance options
     (paper §5.7: "counting on potential benefits of the enabled options").
+    ``sm`` overrides the occupancy limits; by default each variant is
+    judged under its own architecture's SM configuration.
     """
     from .simcache import estimate_stalls_cached
 
+    def _sm(k: Kernel) -> SMConfig:
+        return sm if sm is not None else _arch_of(k).sm
+
     occs = {
-        n: min(occupancy_of(k, sm).occupancy, _launch_occupancy(k, sm))
+        n: min(occupancy_of(k, _sm(k)).occupancy, _launch_occupancy(k, _sm(k)))
         for n, k in variants.items()
     }
     occ_max = max(occs.values())

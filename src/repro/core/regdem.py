@@ -105,11 +105,15 @@ def demote(
 
 
 def auto_targets(kernel: Kernel) -> List[int]:
+    from repro.arch import arch_of
+
     from .occupancy import spill_targets
 
+    arch = arch_of(kernel)
     return spill_targets(
         kernel.reg_count,
         kernel.threads_per_block,
         kernel.shared_size,
-        available_smem=SMEM_LIMIT - kernel.shared_size,
+        available_smem=arch.smem_spill_limit - kernel.shared_size,
+        sm=arch.sm,
     )

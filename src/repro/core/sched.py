@@ -36,13 +36,22 @@ from __future__ import annotations
 
 from typing import Dict, List, Set
 
-from .isa import NUM_BARRIERS, RZ, Ctrl, Instr, Kernel, Label, OpClass
+from .isa import NUM_BARRIERS, RZ, Ctrl, Instr, Kernel, Label
 
-#: Fixed producer->consumer latency for pipelined (non-barrier) ops.
+#: Fixed producer->consumer latency for pipelined (non-barrier) ops
+#: (Maxwell; per-arch values come from the :mod:`repro.arch` registry).
 ALU_LATENCY = 6
 #: Issue cost of a branch/exit.
 CTRL_STALL = 5
 MAX_STALL = 15
+
+
+def _arch_of(kernel: Kernel):
+    """The kernel's :class:`repro.arch.Arch` (lazy import: repro.arch pulls
+    in the binary codecs, which must not load at repro.core import time)."""
+    from repro.arch import arch_of
+
+    return arch_of(kernel)
 
 
 def _blocks(kernel: Kernel) -> List[List[Instr]]:
@@ -65,22 +74,31 @@ def _blocks(kernel: Kernel) -> List[List[Instr]]:
 
 
 def schedule(kernel: Kernel) -> Kernel:
-    """Assign control words in-place; returns the kernel for chaining."""
+    """Assign control words in-place; returns the kernel for chaining.
+
+    The machine model (barrier count, fixed latencies) comes from the
+    kernel's architecture via the :mod:`repro.arch` registry."""
+    arch = _arch_of(kernel)
     for block in _blocks(kernel):
-        _schedule_block(block)
+        _schedule_block(block, arch)
     return kernel
 
 
-def _schedule_block(block: List[Instr]) -> None:
+def _schedule_block(block: List[Instr], arch=None) -> None:
+    if arch is None:
+        from repro.arch import get_arch
+
+        arch = get_arch("maxwell")
+    num_barriers = arch.num_barriers
     # barrier bookkeeping: barrier index -> producing instr position
     barrier_of_reg: Dict[int, int] = {}   # reg word -> barrier idx guarding it
-    barrier_busy: List[bool] = [False] * NUM_BARRIERS
+    barrier_busy: List[bool] = [False] * num_barriers
     read_guard: Dict[int, int] = {}       # reg word -> read barrier of a store
     ready_at: Dict[int, int] = {}         # reg word -> cycle value is ready
     now = 0
 
     def alloc_barrier(ins: Instr) -> int:
-        for b in range(NUM_BARRIERS):
+        for b in range(num_barriers):
             if not barrier_busy[b]:
                 barrier_busy[b] = True
                 return b
@@ -145,9 +163,7 @@ def _schedule_block(block: List[Instr]) -> None:
                 barrier_of_reg[r] = b
         elif ins.dst_words():
             for r in ins.dst_words():
-                ready_at[r] = now + (
-                    ALU_LATENCY if info.klass in (OpClass.FP32, OpClass.INT) else info.klass.latency
-                )
+                ready_at[r] = now + arch.fixed_latency(info.klass)
         if info.needs_read_barrier:
             b = alloc_barrier(ins)
             ins.ctrl.read_bar = b
@@ -161,30 +177,30 @@ def _schedule_block(block: List[Instr]) -> None:
     if block:
         last = block[-1]
         pend = set(barrier_of_reg.values()) | set(read_guard.values())
-        pend |= {b for b in range(NUM_BARRIERS) if barrier_busy[b]}
+        pend |= {b for b in range(num_barriers) if barrier_busy[b]}
         last.ctrl.wait |= pend
 
 
 def export_ctrl_words(kernel: Kernel) -> List[int]:
-    """The kernel's schedule as packed 21-bit control words, one per
-    instruction in stream order (machine form of :func:`schedule`'s output)."""
-    from repro.binary.ctrlwords import pack_ctrl
-
-    return [pack_ctrl(ins.ctrl) for ins in kernel.instructions()]
+    """The kernel's schedule as packed control words, one per instruction
+    in stream order (machine form of :func:`schedule`'s output), in the
+    kernel's architecture layout."""
+    codec = _arch_of(kernel).codec
+    return [codec.pack_ctrl(ins.ctrl) for ins in kernel.instructions()]
 
 
 def import_ctrl_words(kernel: Kernel, words: List[int]) -> Kernel:
-    """Apply packed 21-bit control words onto the kernel's instructions
-    in-place (inverse of :func:`export_ctrl_words`); returns the kernel."""
-    from repro.binary.ctrlwords import unpack_ctrl
-
+    """Apply packed control words (in the kernel's architecture layout)
+    onto the kernel's instructions in-place (inverse of
+    :func:`export_ctrl_words`); returns the kernel."""
+    codec = _arch_of(kernel).codec
     instrs = kernel.instructions()
     if len(words) != len(instrs):
         raise ValueError(
             f"{kernel.name}: {len(words)} control words for {len(instrs)} instructions"
         )
     for ins, word in zip(instrs, words):
-        ins.ctrl = unpack_ctrl(word)
+        ins.ctrl = codec.unpack_ctrl(word)
     return kernel
 
 
@@ -202,6 +218,7 @@ def fixup_stalls(kernel: Kernel) -> Kernel:
     way :func:`_schedule_block` does, but honours the (possibly transformed)
     barrier assignments already present on the instructions.
     """
+    arch = _arch_of(kernel)
     for block in _blocks(kernel):
         ready_at: Dict[int, int] = {}
         now = 0
@@ -224,11 +241,7 @@ def fixup_stalls(kernel: Kernel) -> Kernel:
                     j -= 1
                 now = need
             if ins.dst_words() and not ins.info.needs_write_barrier:
-                lat = (
-                    ALU_LATENCY
-                    if ins.info.klass in (OpClass.FP32, OpClass.INT)
-                    else ins.info.klass.latency
-                )
+                lat = arch.fixed_latency(ins.info.klass)
                 for r in ins.dst_words():
                     ready_at[r] = now + lat
             now += ins.ctrl.stall
@@ -270,7 +283,7 @@ def repair_war(kernel: Kernel) -> int:
     return added
 
 
-def verify_block(block: List[Instr]) -> List[str]:
+def verify_block(block: List[Instr], num_barriers: int = NUM_BARRIERS) -> List[str]:
     """Schedule validation of ONE barrier scope (see :func:`verify_schedule`).
 
     Barriers never span scopes, so scopes verify independently — this is what
@@ -281,7 +294,7 @@ def verify_block(block: List[Instr]) -> List[str]:
     pending_read: Dict[int, int] = {}
     for ins in block:
         for b in ins.ctrl.wait:
-            if not 0 <= b < NUM_BARRIERS:
+            if not 0 <= b < num_barriers:
                 errors.append(f"{ins.render()}: wait on bad barrier {b}")
             pending_write = {r: bb for r, bb in pending_write.items() if bb != b}
             pending_read = {r: bb for r, bb in pending_read.items() if bb != b}
@@ -323,6 +336,7 @@ def verify_schedule(kernel: Kernel) -> List[str]:
     Used by tests and by the translator's self-check.
     """
     errors: List[str] = []
+    num_barriers = _arch_of(kernel).num_barriers
     for block in _blocks(kernel):
-        errors.extend(verify_block(block))
+        errors.extend(verify_block(block, num_barriers))
     return errors

@@ -28,7 +28,7 @@ import dataclasses
 from typing import Dict, Optional, Tuple
 
 from .isa import Kernel
-from .occupancy import MAXWELL, SMConfig
+from .occupancy import SMConfig
 from .simulator import SimResult, simulate
 
 
@@ -120,10 +120,18 @@ class SimCache:
     def simulate(
         self,
         kernel: Kernel,
-        sm: SMConfig = MAXWELL,
+        sm: Optional[SMConfig] = None,
         max_cycles: int = 50_000_000,
     ) -> SimResult:
-        """:func:`repro.core.simulator.simulate`, content-cached."""
+        """:func:`repro.core.simulator.simulate`, content-cached.
+
+        ``sm=None`` resolves to the kernel's architecture SM configuration
+        *before* keying, so the same kernel simulated with and without an
+        explicit (identical) SMConfig shares one cache entry."""
+        if sm is None:
+            from repro.arch import arch_of
+
+            sm = arch_of(kernel).sm
         key = (self.content_key(kernel), sm, max_cycles)
         render = _guard(kernel)
         hit = self._get(self._sims, key, render)
@@ -162,7 +170,7 @@ DEFAULT_SIM_CACHE = SimCache(max_entries=4096)
 
 def simulate_cached(
     kernel: Kernel,
-    sm: SMConfig = MAXWELL,
+    sm: Optional[SMConfig] = None,
     max_cycles: int = 50_000_000,
     cache: Optional[SimCache] = None,
 ) -> SimResult:

@@ -50,13 +50,14 @@ benchmark × variant.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from .isa import Instr, Kernel, Label, NUM_BARRIERS, OpClass
-from .occupancy import MAXWELL, Occupancy, SMConfig, occupancy_of
+from .occupancy import Occupancy, SMConfig, occupancy_of
 
 #: per-class issue interval in cycles per warp-instruction:
-#: 32 lanes-per-warp / unit lanes.
+#: 32 lanes-per-warp / unit lanes (Maxwell table; per-arch values come
+#: from the :mod:`repro.arch` registry).
 ISSUE_INTERVAL: Dict[OpClass, float] = {
     OpClass.FP32: 32 / 128,
     OpClass.INT: 32 / 128,
@@ -79,8 +80,16 @@ ISSUE_WIDTH = 4
 LOCAL_EFFECTIVE_LATENCY = 80
 
 
-def _signal_latency(ins: Instr) -> int:
+def _arch_of(kernel: Kernel):
+    from repro.arch import arch_of
+
+    return arch_of(kernel)
+
+
+def _signal_latency(ins: Instr, arch=None) -> int:
     k = ins.info.klass
+    if arch is not None:
+        return arch.signal_latency(k)
     if k is OpClass.LSU_GLOBAL:
         return 200
     if k is OpClass.LSU_LOCAL:
@@ -172,29 +181,43 @@ class CompiledTrace:
         return len(self.code)
 
 
-def compile_trace(trace: List[Instr]) -> CompiledTrace:
-    """Lower the dynamic stream to flat records (one per static instruction)."""
+def compile_trace(trace: List[Instr], arch=None) -> CompiledTrace:
+    """Lower the dynamic stream to flat records (one per static instruction).
+
+    ``arch`` supplies the machine model (bank conflicts, signal latencies,
+    operand-read release cap); ``None`` keeps the Maxwell table."""
     ct = CompiledTrace([], [], [], [], [], [], [], [])
     rec_of: Dict[int, int] = {}
+    read_cap = 20 if arch is None else arch.latency.read_release
     for ins in trace:
         j = rec_of.get(ins.uid)
         if j is None:
             j = len(ct.klass)
             rec_of[ins.uid] = j
             ctrl = ins.ctrl
+            conflicts = (
+                ins.reg_bank_conflicts() if arch is None else arch.bank_conflicts(ins)
+            )
             ct.klass.append(_KLASS_INDEX[ins.info.klass])
-            ct.cost.append(max(1, ctrl.stall) + ins.reg_bank_conflicts())
+            ct.cost.append(max(1, ctrl.stall) + conflicts)
             ct.waits.append(tuple(sorted(ctrl.wait)))
             ct.write_bar.append(-1 if ctrl.write_bar is None else ctrl.write_bar)
             ct.read_bar.append(-1 if ctrl.read_bar is None else ctrl.read_bar)
-            lat = _signal_latency(ins)
+            lat = _signal_latency(ins, arch)
             ct.write_lat.append(lat)
-            ct.read_lat.append(min(lat, 20))
+            ct.read_lat.append(min(lat, read_cap))
         ct.code.append(j)
     return ct
 
 
-def _issue_loop(ct: CompiledTrace, n_warps: int, max_cycles: int) -> Tuple[float, int]:
+def _issue_loop(
+    ct: CompiledTrace,
+    n_warps: int,
+    max_cycles: int,
+    intervals: Optional[List[float]] = None,
+    issue_width: int = ISSUE_WIDTH,
+    num_barriers: int = NUM_BARRIERS,
+) -> Tuple[float, int]:
     """Stage 2: the event-driven issue loop; returns (cycles, idle_cycles).
 
     Cycle-exact replay of the reference engine's semantics: warps round-robin
@@ -218,10 +241,11 @@ def _issue_loop(ct: CompiledTrace, n_warps: int, max_cycles: int) -> Tuple[float
     #: wait set of the *next* position (what the issuing warp blocks on);
     #: empty tuple past the end
     p_next_waits = [ct.waits[j] for j in code[1:]] + [()]
-    intervals = _KLASS_INTERVAL
+    if intervals is None:
+        intervals = _KLASS_INTERVAL
 
     pc = [0] * n_warps
-    bars = [[0.0] * NUM_BARRIERS for _ in range(n_warps)]
+    bars = [[0.0] * num_barriers for _ in range(n_warps)]
     #: earliest cycle each warp can issue its next instruction (inf = done)
     next_time = [0.0] * n_warps
     n_done = 0
@@ -269,9 +293,9 @@ def _issue_loop(ct: CompiledTrace, n_warps: int, max_cycles: int) -> Tuple[float
                             if v > t:
                                 t = v
                     next_time[w] = t
-                if issued >= ISSUE_WIDTH:
+                if issued >= issue_width:
                     break
-            if issued >= ISSUE_WIDTH:
+            if issued >= issue_width:
                 break
         rr += 1
         if rr >= n_warps:
@@ -323,7 +347,7 @@ def _issue_loop(ct: CompiledTrace, n_warps: int, max_cycles: int) -> Tuple[float
 
 def simulate(
     kernel: Kernel,
-    sm: SMConfig = MAXWELL,
+    sm: Optional[SMConfig] = None,
     max_cycles: int = 50_000_000,
 ) -> SimResult:
     """Simulate one wave of resident warps on one SM; scale by wave count.
@@ -331,12 +355,23 @@ def simulate(
     Two-stage engine: :func:`compile_trace` lowers the dynamic stream to
     flat numeric records, :func:`_issue_loop` replays the scheduling
     semantics event-to-event.  Cycle-exact with :func:`simulate_reference`.
+
+    The machine model (unit lanes, latencies, issue width) comes from the
+    kernel's architecture; ``sm`` overrides the occupancy limits only
+    (default: the arch's own SMConfig), which permits deliberate
+    cross-arch what-ifs like ``simulate(volta_kernel, MAXWELL)``.
     """
+    arch = _arch_of(kernel)
+    if sm is None:
+        sm = arch.sm
     occ = occupancy_of(kernel, sm)
     trace = flatten_trace(kernel)
     n_warps = max(occ.resident_warps, 1)
-    ct = compile_trace(trace)
-    cycle, idle_cycles = _issue_loop(ct, n_warps, max_cycles)
+    ct = compile_trace(trace, arch)
+    intervals = [arch.issue_interval(k) for k in OpClass]
+    cycle, idle_cycles = _issue_loop(
+        ct, n_warps, max_cycles, intervals, arch.issue_width, arch.num_barriers
+    )
 
     # fractional waves: charge the launch by work/throughput, not by rounding
     # partial waves up (a 1.2-wave launch is not 2x a 1.0-wave launch)
@@ -355,11 +390,20 @@ def simulate(
 
 def simulate_reference(
     kernel: Kernel,
-    sm: SMConfig = MAXWELL,
+    sm: Optional[SMConfig] = None,
     max_cycles: int = 50_000_000,
 ) -> SimResult:
     """The pre-optimization cycle-by-cycle engine, kept verbatim as the
-    parity oracle for :func:`simulate` (golden test: identical cycles)."""
+    parity oracle for :func:`simulate` (golden test: identical cycles).
+
+    Arch-parameterized the same way as :func:`simulate`, so the parity
+    holds per architecture."""
+    arch = _arch_of(kernel)
+    if sm is None:
+        sm = arch.sm
+    issue_width = arch.issue_width
+    num_barriers = arch.num_barriers
+    issue_interval = {k: arch.issue_interval(k) for k in OpClass}
     occ = occupancy_of(kernel, sm)
     trace = flatten_trace(kernel)
     n_warps = max(occ.resident_warps, 1)
@@ -367,7 +411,7 @@ def simulate_reference(
     # per-warp state
     pc = [0] * n_warps
     ready = [0.0] * n_warps  # earliest issue cycle
-    bar_signal = [[0.0] * NUM_BARRIERS for _ in range(n_warps)]
+    bar_signal = [[0.0] * num_barriers for _ in range(n_warps)]
     done = [False] * n_warps
     n_done = 0
 
@@ -387,7 +431,7 @@ def simulate_reference(
     while n_done < n_warps and cycle < max_cycles:
         issued = 0
         for k in range(n_warps):
-            if issued >= ISSUE_WIDTH:
+            if issued >= issue_width:
                 break
             w = (rr + k) % n_warps
             if done[w]:
@@ -404,15 +448,15 @@ def simulate_reference(
                 continue
             # ---- issue -----------------------------------------------------
             issued += 1
-            unit_free[klass] = max(unit_free[klass], cycle) + ISSUE_INTERVAL[klass]
-            issue_cost = max(1, ins.ctrl.stall) + ins.reg_bank_conflicts()
+            unit_free[klass] = max(unit_free[klass], cycle) + issue_interval[klass]
+            issue_cost = max(1, ins.ctrl.stall) + arch.bank_conflicts(ins)
             ready[w] = cycle + issue_cost
             if ins.ctrl.write_bar is not None:
-                bar_signal[w][ins.ctrl.write_bar] = cycle + _signal_latency(ins)
+                bar_signal[w][ins.ctrl.write_bar] = cycle + _signal_latency(ins, arch)
             if ins.ctrl.read_bar is not None:
                 # operands are read shortly after issue
                 bar_signal[w][ins.ctrl.read_bar] = cycle + min(
-                    _signal_latency(ins), 20
+                    _signal_latency(ins, arch), arch.latency.read_release
                 )
             pc[w] += 1
             if pc[w] >= len(trace):

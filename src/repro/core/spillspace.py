@@ -28,8 +28,17 @@ from typing import TYPE_CHECKING, List
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (typing only)
     from .passes import PassContext
 
-#: Maxwell per-block shared memory limit (bytes).
+#: Maxwell per-block shared memory limit (bytes).  Per-arch budgets come
+#: from the :mod:`repro.arch` registry (see :func:`spill_limit`).
 SMEM_LIMIT = 48 * 1024
+
+
+def spill_limit(kernel) -> int:
+    """The per-block shared-memory budget demotion may spill into, from the
+    kernel's architecture (Maxwell 48 KiB, Volta/Turing 96 KiB)."""
+    from repro.arch import arch_of
+
+    return arch_of(kernel).smem_spill_limit
 
 
 def _round4(x: int) -> int:
@@ -88,7 +97,7 @@ class SharedSpace(SpillSpace):
 
         s2r = Instr("S2R", [ctx.rdv], ctrl=Ctrl(stall=1))
         shl = Instr("SHL", [ctx.rda], [ctx.rdv], imm=2.0, ctrl=Ctrl(stall=1))
-        tracker = BarrierTracker()
+        tracker = BarrierTracker(ctx.arch)
         s2r.ctrl.write_bar = tracker.get_barrier(s2r)
         shl.ctrl.wait.add(s2r.ctrl.write_bar)
         ctx.kernel.items[:0] = [s2r, shl]
@@ -97,8 +106,12 @@ class SharedSpace(SpillSpace):
     def account(self, ctx: "PassContext") -> None:
         k = ctx.kernel
         k.demoted_size = ctx.demoted_words * k.threads_per_block * 4
-        if self.check_limit and k.total_shared > SMEM_LIMIT:
-            raise ValueError(f"{k.name}: demotion exceeds shared memory limit")
+        limit = spill_limit(k)
+        if self.check_limit and k.total_shared > limit:
+            raise ValueError(
+                f"{k.name}: demotion exceeds shared memory limit "
+                f"({limit // 1024} KiB on arch {k.arch!r})"
+            )
 
 
 class LocalSpace(SpillSpace):

@@ -404,6 +404,7 @@ def roundtrip(kernel: Kernel) -> Kernel:
         demoted_size=kernel.demoted_size,
         live_in=set(kernel.live_in),
         live_out=set(kernel.live_out),
+        arch=kernel.arch,
     )
     k2.rda = kernel.rda
     if k2.render().splitlines()[1:] != text.splitlines()[1:]:

@@ -144,13 +144,14 @@ def test_v1_container_still_loads():
     k.shared_size = 512
     k.rda = 9
     v1 = dumps(k, version=1)
-    v2 = dumps(k)
+    v2 = dumps(k, version=2)
     assert len(v1) == len(v2) - 4  # v2 adds exactly the 4-byte per-kernel CRC
     back = loads(v1)
     assert back.render() == k.render()
     assert back.rda == 9 and back.shared_size == 512
+    assert back.arch == "maxwell"  # pre-registry containers default to Maxwell
     assert kernel_names(v1) == ["tiny"]
-    # and re-dumping the v1-decoded kernel produces a v2 container
+    # and re-dumping the v1-decoded kernel produces a current (v3) container
     assert loads(dumps(back)).render() == k.render()
 
 

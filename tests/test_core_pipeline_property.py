@@ -2,6 +2,8 @@
 pipeline *prefix* — the state at each pass boundary — preserves dataflow
 equivalence and schedule validity, for random kernels and option sets."""
 
+import os
+
 import pytest
 
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
@@ -20,8 +22,11 @@ from repro.core.regdem import auto_targets
 from repro.core.sched import verify_schedule
 from repro.core.spillspace import LocalSpace, SharedSpace
 
+#: nightly CI sets REGDEM_PROPERTY_SCALE to sweep a larger input space
+SCALE = max(1, int(os.environ.get("REGDEM_PROPERTY_SCALE", "1")))
+
 _slow = settings(
-    max_examples=10,
+    max_examples=10 * SCALE,
     deadline=None,
     suppress_health_check=[HealthCheck.too_slow],
 )

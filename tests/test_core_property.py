@@ -1,4 +1,10 @@
-"""Property-based tests (hypothesis) for the system's invariants."""
+"""Property-based tests (hypothesis) for the system's invariants.
+
+``REGDEM_PROPERTY_SCALE`` multiplies every example budget — the nightly CI
+workflow sets it to sweep a much larger input space than the per-push run.
+"""
+
+import os
 
 import pytest
 
@@ -13,8 +19,10 @@ from repro.core.occupancy import MAXWELL, occupancy
 from repro.core.regdem import RegDemOptions, auto_targets, demote
 from repro.core.sched import verify_schedule
 
+SCALE = max(1, int(os.environ.get("REGDEM_PROPERTY_SCALE", "1")))
+
 _slow = settings(
-    max_examples=15,
+    max_examples=15 * SCALE,
     deadline=None,
     suppress_health_check=[HealthCheck.too_slow],
 )
@@ -49,7 +57,7 @@ def test_demotion_invariants(seed):
     strategy=st.sampled_from(["static", "cfg", "conflict"]),
     flags=st.tuples(st.booleans(), st.booleans(), st.booleans(), st.booleans()),
 )
-@settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@settings(max_examples=20 * SCALE, deadline=None, suppress_health_check=[HealthCheck.too_slow])
 def test_demotion_options_never_break(seed, strategy, flags):
     k = generate(random_profile(seed % 30))
     targets = auto_targets(k)
@@ -85,7 +93,7 @@ def test_compaction_idempotent_and_tight(seed):
     static=st.integers(min_value=0, max_value=4096),
     r=st.integers(min_value=0, max_value=24),
 )
-@settings(max_examples=60, deadline=None)
+@settings(max_examples=60 * SCALE, deadline=None)
 def test_eq1_layout_bank_conflict_free(n_threads, static, r):
     """Paper eq. 1: for any (threads/block, static smem, demoted index), a
     warp's 32 lanes always touch 32 distinct banks."""
@@ -99,7 +107,7 @@ def test_eq1_layout_bank_conflict_free(n_threads, static, r):
     thr=st.sampled_from([32, 64, 128, 256, 512, 1024]),
     smem=st.integers(min_value=0, max_value=MAXWELL.smem_per_block),
 )
-@settings(max_examples=100, deadline=None)
+@settings(max_examples=100 * SCALE, deadline=None)
 def test_occupancy_bounds(regs, thr, smem):
     occ = occupancy(regs, thr, smem)
     assert 0.0 <= occ.occupancy <= 1.0
