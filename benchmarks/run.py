@@ -16,6 +16,8 @@ Sections:
                 recorded pre-optimization baseline     (writes BENCH_sim.json)
   arch          cross-architecture Table-3 demotion results + occupancy
                 comparison over every registered arch  (writes BENCH_arch.json)
+  search        predictor-guided autotuning search vs the fixed variant set
+                over all 9 benchmarks x every arch    (writes BENCH_search.json)
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 Some sections: ``... -m benchmarks.run --only fig6,fig7`` (comma-separated
@@ -36,7 +38,7 @@ def main() -> None:
         metavar="SECTION[,SECTION...]",
         help="run only these sections (comma-separated, repeatable): "
              "table1|fig6|fig7|fig8|fig9|roofline|tpu_selector|binary|"
-             "pipeline|sim|arch",
+             "pipeline|sim|arch|search",
     )
     ap.add_argument("--binary-json", default=None, metavar="PATH",
                     help="where the binary section writes its JSON report "
@@ -50,6 +52,12 @@ def main() -> None:
     ap.add_argument("--arch-json", default=None, metavar="PATH",
                     help="where the arch section writes its JSON report "
                          "(default: BENCH_arch.json in the cwd)")
+    ap.add_argument("--search-json", default=None, metavar="PATH",
+                    help="where the search section writes its JSON report "
+                         "(default: BENCH_search.json in the cwd)")
+    ap.add_argument("--search-workers", type=int, default=0, metavar="N",
+                    help="process-pool size for the search section "
+                         "(default: in-process; results are identical)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -58,6 +66,7 @@ def main() -> None:
         paper_figs,
         pipeline_bench,
         roofline,
+        search_bench,
         sim_bench,
         tpu_selector,
     )
@@ -74,6 +83,12 @@ def main() -> None:
     def arch_rows():
         return arch_bench.arch_rows(args.arch_json or arch_bench.JSON_PATH)
 
+    def search_rows():
+        return search_bench.search_rows(
+            args.search_json or search_bench.JSON_PATH,
+            workers=args.search_workers,
+        )
+
     sections = {
         "table1": paper_figs.table1_occupancy,
         "fig6": paper_figs.fig6_speedups,
@@ -86,6 +101,7 @@ def main() -> None:
         "pipeline": pipeline_rows,
         "sim": sim_rows,
         "arch": arch_rows,
+        "search": search_rows,
     }
 
     selected = None

@@ -1,0 +1,146 @@
+"""Autotuning-search benchmarks: the widened variant space vs the fixed §5.3 set.
+
+For every Table-1 benchmark and every registered architecture, run the
+predictor-guided search (:func:`repro.core.search.search`) restricted to
+that arch, anchored on the fixed ``make_variants`` comparison set — so the
+search winner is by construction simulated alongside what the paper's fixed
+pipeline would have shipped, and the ``win`` column is a direct
+like-for-like comparison:
+
+* ``win``        fixed-pick simulated cycles / search-pick simulated cycles
+                 (>= 1.0 always: the fixed set is anchored into the
+                 confirmation stage; > 1.0 where the wider space found a
+                 strictly better variant);
+* ``agreement``  predictor-vs-simulator ranking agreement over the
+                 confirmed set (the §5 accuracy claim as one number);
+* ``variants_per_s``  demotion pipelines explored per second of search
+                 wall time — the headline throughput the CI trend gate
+                 watches.
+
+Writes ``BENCH_search.json`` atomically.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, Iterator, List, Optional
+
+from repro.arch import arch_names, retarget
+from repro.core.kernelgen import PAPER_BENCHMARKS, generate
+from repro.core.predictor import predict
+from repro.core.search import SearchConfig, search
+from repro.core.simcache import simulate_cached
+from repro.core.variants import make_variants_for
+
+from ._util import write_json_atomic
+
+#: Default location of the machine-readable report (cwd-relative, i.e. the
+#: repo root under the documented ``python -m benchmarks.run`` invocation).
+JSON_PATH = "BENCH_search.json"
+
+
+def _geomean(xs: List[float]) -> float:
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def tune_benchmark(bench: str, arch: str, workers: int = 0) -> Dict:
+    """Search one (benchmark, arch) cell, anchored on the fixed §5.3 set.
+
+    Returns the per-cell report row (what ``BENCH_search.json`` stores under
+    ``kernels.<bench>.<arch>``, plus the wall ``seconds``).  The golden test
+    recomputes single cells through this same entry point.
+    """
+    prof = PAPER_BENCHMARKS[bench]
+    base = generate(prof)
+    k = base if arch == "maxwell" else retarget(base, arch)
+    # the fixed §5.3 pipeline: five variants, predictor picks one
+    fixed = make_variants_for(k, prof.regdem_target, prof.nvcc_spills)
+    fixed_kernels = {n: v.kernel for n, v in fixed.items()}
+    fixed_best, _ = predict(fixed_kernels)
+    fixed_cycles = simulate_cached(fixed_kernels[fixed_best]).total_cycles
+    # the search, anchored on that same fixed set
+    anchors = {f"{arch}/{n}": v.kernel for n, v in fixed.items() if n != "nvcc"}
+    outcome = search(
+        k, SearchConfig(archs=(arch,), workers=workers), extra_variants=anchors
+    )
+    sr = outcome.report
+    best_cycles = sr.cycles[sr.chosen]
+    return {
+        "chosen": sr.chosen,
+        "fixed_best": fixed_best,
+        "cycles_chosen": best_cycles,
+        "cycles_fixed": fixed_cycles,
+        "win": round(fixed_cycles / best_cycles, 4),
+        "speedup_vs_nvcc": round(sr.speedup, 4),
+        "agreement": round(sr.agreement, 4),
+        "space_size": sr.space_size,
+        "explored": sr.explored,
+        "simulated": sr.simulated,
+        "seconds": round(sr.seconds, 4),
+    }
+
+
+def measure(workers: int = 0) -> Dict[str, Dict]:
+    """The full 9-benchmarks-x-every-arch sweep as a report dict."""
+    archs = arch_names()
+    report: Dict[str, Dict] = {"kernels": {}, "summary": {}}
+    explored_total = 0
+    searches = 0
+    agreements: List[float] = []
+    wins: List[float] = []
+    strict_wins = 0
+    search_seconds = 0.0
+
+    t0 = time.perf_counter()
+    for bench in PAPER_BENCHMARKS:
+        report["kernels"][bench] = {}
+        for arch in archs:
+            row = tune_benchmark(bench, arch, workers=workers)
+            report["kernels"][bench][arch] = row
+            explored_total += row["explored"]
+            searches += 1
+            search_seconds += row["seconds"]
+            agreements.append(row["agreement"])
+            wins.append(row["cycles_fixed"] / row["cycles_chosen"])
+            strict_wins += row["cycles_chosen"] < row["cycles_fixed"]
+    elapsed = time.perf_counter() - t0
+
+    report["summary"] = {
+        "searches": searches,
+        "explored": explored_total,
+        "variants_per_s": round(explored_total / search_seconds, 2)
+        if search_seconds
+        else 0.0,
+        "mean_agreement": round(sum(agreements) / len(agreements), 4),
+        "geomean_win": round(_geomean(wins), 4),
+        "strict_wins": strict_wins,
+        "seconds": round(elapsed, 3),
+        "workers": workers,
+    }
+    return report
+
+
+def search_rows(
+    json_path: Optional[str] = JSON_PATH, workers: int = 0
+) -> Iterator[str]:
+    """Yield CSV rows; write ``BENCH_search.json`` as a side effect."""
+    report = measure(workers=workers)
+    for bench, per_arch in report["kernels"].items():
+        for arch, row in per_arch.items():
+            yield (
+                f"search_{arch}_{bench},{row['seconds'] * 1e6:.0f},"
+                f"chosen={row['chosen']};win={round(row['win'], 3)};"
+                f"agreement={round(row['agreement'], 3)};"
+                f"explored={row['explored']}/{row['space_size']}"
+            )
+    if json_path:
+        write_json_atomic(json_path, report)
+    s = report["summary"]
+    yield (
+        f"search_summary,{s['seconds'] * 1e6:.0f},"
+        f"variants_per_s={s['variants_per_s']};"
+        f"geomean_win={s['geomean_win']};"
+        f"strict_wins={s['strict_wins']}/{s['searches']};"
+        f"mean_agreement={s['mean_agreement']}"
+    )

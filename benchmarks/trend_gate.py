@@ -41,6 +41,9 @@ METRICS: List[Tuple[str, Tuple[str, ...], str]] = [
     ("BENCH_pipeline.json", ("cache", "warm_hit_rate"), "higher"),
     ("BENCH_sim.json", ("engine", "kernels_per_s"), "higher"),
     ("BENCH_sim.json", ("cache", "warm_hit_rate"), "higher"),
+    ("BENCH_search.json", ("summary", "variants_per_s"), "higher"),
+    ("BENCH_search.json", ("summary", "mean_agreement"), "higher"),
+    ("BENCH_search.json", ("summary", "geomean_win"), "higher"),
 ]
 
 DEFAULT_TOLERANCE = 0.30
@@ -78,16 +81,33 @@ def compare(
     metrics: Optional[List[Tuple[str, Tuple[str, ...], str]]] = None,
 ) -> Iterator[Tuple[str, float, float, str]]:
     """Yield ``(metric, baseline, fresh, verdict)`` per headline metric;
-    verdict is ``"ok"``, ``"improved"``, or ``"REGRESSED"``."""
+    verdict is ``"ok"``, ``"improved"``, ``"REGRESSED"``, or
+    ``"no-baseline"``.
+
+    A fresh report with **no committed baseline at all** is warned about and
+    skipped (verdict ``"no-baseline"``, baseline reported as ``nan``) rather
+    than failing the gate: that is exactly the state of the first CI run
+    after a new benchmark section lands, before its ``BENCH_*.json`` is
+    committed.  A *corrupt* baseline, a missing metric inside an existing
+    baseline, or a missing fresh report remain hard errors — those mean the
+    atomic-write contract or the harness broke, not that a section is new.
+    """
     cache: dict = {}
     for fname, path, direction in metrics or METRICS:
-        for d in (baseline_dir, fresh_dir):
-            key = os.path.join(d, fname)
-            if key not in cache:
-                cache[key] = _load(key)
-        base = _lookup(cache[os.path.join(baseline_dir, fname)], path, f"baseline {fname}")
-        new = _lookup(cache[os.path.join(fresh_dir, fname)], path, f"fresh {fname}")
+        base_path = os.path.join(baseline_dir, fname)
+        if base_path not in cache:
+            cache[base_path] = (
+                _load(base_path) if os.path.exists(base_path) else None
+            )
+        fresh_path = os.path.join(fresh_dir, fname)
+        if fresh_path not in cache:
+            cache[fresh_path] = _load(fresh_path)
         label = f"{fname}:{'.'.join(path)}"
+        new = _lookup(cache[fresh_path], path, f"fresh {fname}")
+        if cache[base_path] is None:
+            yield label, float("nan"), new, "no-baseline"
+            continue
+        base = _lookup(cache[base_path], path, f"baseline {fname}")
         if direction == "higher":
             if new < base * (1 - tolerance):
                 verdict = "REGRESSED"
@@ -124,11 +144,24 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     width = max(len(r[0]) for r in rows)
     failed = False
+    skipped = 0
     for label, base, new, verdict in rows:
+        if verdict == "no-baseline":
+            skipped += 1
+            print(f"{label:<{width}}  baseline=<missing>  fresh={new:<10g} "
+                  f"         {verdict}")
+            continue
         delta = (new - base) / base * 100 if base else float("inf")
         print(f"{label:<{width}}  baseline={base:<10g} fresh={new:<10g} "
               f"{delta:+7.1f}%  {verdict}")
         failed = failed or verdict == "REGRESSED"
+    if skipped:
+        print(
+            f"\nWARNING: {skipped} metric(s) have no committed baseline yet "
+            "and were skipped — commit the freshly measured BENCH_*.json to "
+            "start gating them.",
+            file=sys.stderr,
+        )
     if failed:
         print(
             f"\nFAIL: headline metric regressed beyond +-{args.tolerance:.0%} "

@@ -17,36 +17,81 @@ benchmark kernels (plus a duplicate) into ONE v2 container, translates it in
 one call, and prints per-kernel outcomes and the translation-cache hit rate:
 
     PYTHONPATH=src python examples/translate_kernel.py --batch cfd,nn,cfd
+
+``--tune`` replaces the fixed variant set with the predictor-guided
+autotuning search (every candidate strategy x the full spill-target ladder x
+option knobs x every registered architecture), fanning out over ``--workers``
+processes; the per-kernel search report comes back as a ``.note`` section of
+the emitted container:
+
+    PYTHONPATH=src python examples/translate_kernel.py --kernel cfd --tune
+    PYTHONPATH=src python examples/translate_kernel.py --batch cfd,nn,cfd --tune --workers 4
 """
 
 import argparse
+import json
 
-from repro.binary import dumps, kernel_names, loads, loads_many, overlay
-from repro.core import TranslationService, occupancy_of, translate_binary
+from repro.binary import dumps, kernel_names, loads, loads_many, overlay, read_notes
+from repro.core import SearchConfig, TranslationService, occupancy_of, translate_binary
 from repro.core.isa import equivalent
 from repro.core.kernelgen import PAPER_BENCHMARKS, paper_kernel
 from repro.core.regdem import auto_targets
 from repro.core.simulator import simulate, speedup
 
 
-def run_batch(names) -> None:
+def run_batch(names, tune=False, workers=0) -> None:
     """Pack the named kernels into one multi-kernel container and translate
-    the whole batch in a single call."""
+    (or autotune) the whole batch in a single call."""
     kernels = [paper_kernel(n) for n in names]
     blob = dumps(kernels)
     print(f"batch: {len(kernels)} kernels {names} in one {len(blob)}B container "
           f"({kernel_names(blob)})")
     service = TranslationService()
-    out, report = service.translate(blob)
+    if tune:
+        out, report = service.tune(blob, SearchConfig(workers=workers))
+    else:
+        out, report = service.translate(blob)
     translated = loads_many(out)
     for orig, dec, rep, hit in zip(kernels, translated, report.reports, report.cached):
         src = "cache" if hit else f"{len(rep.considered)} variants"
-        print(f"  {orig.name:10s} {orig.reg_count:3d} -> {dec.reg_count:3d} regs, "
-              f"chose {rep.chosen} ({src})")
+        print(f"  {orig.name:10s} {orig.reg_count:3d} -> {dec.reg_count:3d} regs "
+              f"({dec.arch}), chose {rep.chosen} ({src})")
         assert equivalent(orig, dec), "translation must preserve semantics"
+    if tune:
+        for name, payload in sorted(read_notes(out).items()):
+            r = json.loads(payload)
+            print(f"  note {name}: explored {r['explored']}/{r['space_size']}, "
+                  f"simulated {r['simulated']}, speedup {r['speedup']:.3f}x, "
+                  f"agreement {r['agreement']:.2f}")
     print(f"one call: {len(blob)}B in, {len(out)}B out; cache "
           f"{report.cache_hits} hits / {report.cache_misses} misses "
           f"(hit rate {report.hit_rate:.2f})")
+    print("OK")
+
+
+def run_tune(name, workers=0, overlay_out=False) -> None:
+    """Autotune one kernel binary->binary and walk through the search report."""
+    k = paper_kernel(name)
+    occ = occupancy_of(k)
+    print(f"kernel {k.name}: {k.reg_count} regs, occupancy {occ.occupancy:.3f} "
+          f"(limited by {occ.limiter}); spill-target ladder {auto_targets(k)}")
+    blob = dumps(k)
+    out, report = translate_binary(blob, tune=True,
+                                   search_config=SearchConfig(workers=workers))
+    sr = report.search
+    print(f"searched {sr.space_size} configurations: explored {sr.explored} "
+          f"demotions, beam {len(sr.beam)}, simulated {sr.simulated}")
+    print(f"predictor choice: {sr.predictor_choice}; confirmed winner: {sr.chosen} "
+          f"({sr.speedup:.3f}x over its arch's nvcc baseline, "
+          f"agreement {sr.agreement:.2f})")
+    for arch, best in sorted(sr.per_arch.items()):
+        print(f"  best on {arch:8s}: {best} ({sr.cycles[best]} cycles)")
+    chosen = loads(out)
+    assert equivalent(k, chosen), "tuned kernel must preserve semantics"
+    print(f"binary->binary: {len(blob)}B in, {len(out)}B out "
+          f"(+{len(read_notes(out))} search-report note)")
+    if overlay_out:
+        print(overlay(chosen))
     print("OK")
 
 
@@ -60,6 +105,12 @@ def main() -> None:
                     help="translate several kernels as one multi-kernel "
                          "container (default batch repeats cfd to show the "
                          "translation cache)")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune with the predictor-guided search instead "
+                         "of the fixed variant set")
+    ap.add_argument("--workers", type=int, default=0, metavar="N",
+                    help="search process-pool size (default: in-process; "
+                         "results are identical for any pool size)")
     args = ap.parse_args()
 
     if args.batch:
@@ -68,7 +119,11 @@ def main() -> None:
         if bad or not names:
             ap.error(f"--batch: invalid kernel name(s) {bad or args.batch!r} "
                      f"(choose from {', '.join(sorted(PAPER_BENCHMARKS))})")
-        run_batch(names)
+        run_batch(names, tune=args.tune, workers=args.workers)
+        return
+
+    if args.tune:
+        run_tune(args.kernel, workers=args.workers, overlay_out=args.overlay)
         return
 
     k = paper_kernel(args.kernel)

@@ -35,6 +35,7 @@ from .container import (
     kernel_names,
     loads,
     loads_many,
+    read_notes,
 )
 from .ctrlwords import (
     CTRL_BITS,
@@ -87,6 +88,7 @@ __all__ = [
     "overlay_lines",
     "pack_bundle",
     "pack_ctrl",
+    "read_notes",
     "roundtrip",
     "unpack_bundle",
     "unpack_ctrl",

@@ -49,7 +49,7 @@ from __future__ import annotations
 
 import struct
 import zlib
-from typing import Dict, Iterable, List, Sequence, Tuple, Union
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from repro.core.isa import OPCODES, Kernel
 
@@ -60,7 +60,7 @@ VERSION = 3
 SUPPORTED_VERSIONS = (1, 2, 3)
 
 #: Section kinds (the ``kind`` column of the section table).
-SEC_NULL, SEC_STRTAB, SEC_KINFO, SEC_TEXT, SEC_LABELS = range(5)
+SEC_NULL, SEC_STRTAB, SEC_KINFO, SEC_TEXT, SEC_LABELS, SEC_NOTE = range(6)
 
 _HDR = struct.Struct("<8sHHIHHIII")  # magic, version, n_sections, shoff,
 #                                      strtab index, n_kernels, opcode crc,
@@ -201,12 +201,24 @@ class _StrTab:
         return blob[off:end].decode("utf-8")
 
 
-def dumps(kernels: Union[Kernel, Iterable[Kernel]], version: int = VERSION) -> bytes:
+def dumps(
+    kernels: Union[Kernel, Iterable[Kernel]],
+    version: int = VERSION,
+    notes: Optional[Dict[str, bytes]] = None,
+) -> bytes:
     """Serialize one kernel (or an iterable of kernels) to container bytes.
 
     ``version`` selects the container format (v3 default; v1/v2 write the
     legacy records — no arch tag, v1 also no per-kernel CRC — for interop
-    tests, and can only represent Maxwell kernels)."""
+    tests, and can only represent Maxwell kernels).
+
+    ``notes`` attaches opaque metadata blobs as ``.note.<name>`` sections
+    (ELF ``.note``-style), emitted in sorted name order for byte-stable
+    output.  Notes ride outside the kernel records: they never affect a
+    kernel's content CRC or decoding (every reader skips unknown section
+    kinds), but the container-level content checksum covers them.  The
+    translation service stores each tuned kernel's search report this way;
+    :func:`read_notes` retrieves them."""
     if version not in SUPPORTED_VERSIONS:
         raise ContainerError(f"cannot write container version {version}")
     klist = [kernels] if isinstance(kernels, Kernel) else list(kernels)
@@ -284,6 +296,12 @@ def dumps(kernels: Union[Kernel, Iterable[Kernel]], version: int = VERSION) -> b
         if version >= 3:
             fields = fields + (strtab.add(arch_name),)
         kinfo_records.append(_KINFO_BY_VERSION[version].pack(*fields))
+
+    for note_name in sorted(notes or {}):
+        payload = notes[note_name]
+        if not isinstance(payload, (bytes, bytearray, memoryview)):
+            raise ContainerError(f"note {note_name!r}: payload must be bytes")
+        sections.append((f".note.{note_name}", SEC_NOTE, bytes(payload)))
 
     sections.insert(1, (".kinfo", SEC_KINFO, b"".join(kinfo_records)))
     sections.append((".strtab", SEC_STRTAB, b""))  # payload patched below
@@ -452,6 +470,17 @@ def loads(data: bytes) -> Kernel:
             "(use loads_many)"
         )
     return kernels[0]
+
+
+def read_notes(data: bytes) -> Dict[str, bytes]:
+    """Metadata blobs attached with ``dumps(..., notes=...)``, keyed by note
+    name (the section name minus its ``.note.`` prefix)."""
+    sections, _, _ = _parse_sections(data)
+    notes: Dict[str, bytes] = {}
+    for name, kind, payload in sections:
+        if kind == SEC_NOTE:
+            notes[name[len(".note."):]] = payload
+    return notes
 
 
 def kernel_names(data: bytes) -> List[str]:

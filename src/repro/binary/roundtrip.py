@@ -10,7 +10,7 @@ corpus.
 
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Dict, Optional, Sequence
 
 from repro.core.isa import Kernel, equivalent
 from repro.core.sched import verify_schedule
@@ -48,14 +48,20 @@ def verified_dumps(kernel: Kernel, check_semantics: bool = True) -> bytes:
 
 
 def verified_dumps_many(
-    kernels: Sequence[Kernel], check_semantics: bool = True
+    kernels: Sequence[Kernel],
+    check_semantics: bool = True,
+    notes: Optional[Dict[str, bytes]] = None,
 ) -> bytes:
     """Multi-kernel :func:`verified_dumps`: serialize the batch into one
     container and prove the round trip is faithful for **every** kernel
     (render identity, byte stability, schedule preservation, and optionally
-    dataflow equivalence); returns the verified container bytes."""
+    dataflow equivalence); returns the verified container bytes.
+
+    ``notes`` are attached as ``.note.*`` sections and take part in the
+    byte-stability check (re-encoding the decoded kernels with the same
+    notes must reproduce the container bit for bit)."""
     klist = list(kernels)
-    blob = dumps(klist)
+    blob = dumps(klist, notes=notes)
     decoded = loads_many(blob)
     if len(decoded) != len(klist):
         raise RoundTripError(
@@ -63,7 +69,7 @@ def verified_dumps_many(
         )
     for kernel, dec in zip(klist, decoded):
         _check_pair(kernel, dec, check_semantics)
-    if dumps(decoded) != blob:
+    if dumps(decoded, notes=notes) != blob:
         raise RoundTripError("multi-kernel container bytes are not stable")
     return blob
 

@@ -20,6 +20,8 @@ Faithful-reproduction layer:
                                  issue loop, cycle-exact vs the reference)
 * :mod:`repro.core.simcache`    content-addressed sim/analysis cache
 * :mod:`repro.core.predictor`   §4 compile-time performance predictor
+* :mod:`repro.core.search`      predictor-guided parallel autotuning search
+                                 over the widened variant space
 * :mod:`repro.core.translator`  pyReDe driver: batch, cached, multi-kernel
                                  binary-translation service
 
@@ -59,6 +61,13 @@ from .passes import (
     demotion_pipeline,
 )
 from .regdem import RegDemOptions, RegDemResult, auto_targets, demote
+from .search import (
+    SearchConfig,
+    SearchOutcome,
+    SearchReport,
+    ScoredVariant,
+    search,
+)
 from .simcache import DEFAULT_SIM_CACHE, SimCache, simulate_cached
 from .simulator import SimResult, simulate, simulate_reference, speedup
 from .spillspace import LocalSpace, SharedSpace, SpillSpace
@@ -96,6 +105,11 @@ __all__ = [
     "RegDemResult",
     "auto_targets",
     "demote",
+    "SearchConfig",
+    "SearchOutcome",
+    "SearchReport",
+    "ScoredVariant",
+    "search",
     "DEFAULT_SIM_CACHE",
     "SimCache",
     "simulate_cached",

@@ -73,6 +73,18 @@ def _excluded(kernel: Kernel) -> Set[int]:
     return excl
 
 
+def spillable(kernel: Kernel) -> List[int]:
+    """Leading registers eligible for demotion, ascending.
+
+    The strategy-independent candidate pool: everything :func:`make_candidates`
+    could ever return, before any cost ordering.  The autotuning search uses
+    it to prune kernels with nothing to demote without running a pipeline.
+    """
+    widths = width_map(kernel)
+    excl = _excluded(kernel)
+    return [r for r in sorted(widths) if r not in excl]
+
+
 def make_candidates(kernel: Kernel, strategy: str) -> List[Tuple[int, int]]:
     """Ordered demotion queue: list of (leading_reg, width)."""
     if strategy not in STRATEGIES:

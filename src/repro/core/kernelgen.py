@@ -200,10 +200,15 @@ def generate(profile: Profile) -> Kernel:
         else:
             emit("FADD", [temps[-1]], [t, temps[-1]])
     # user shared memory traffic (tree-traversal caches): stays inside the
-    # programmer's static allocation [0, shared_size)
-    for j in range(profile.smem_ops_per_iter):
+    # programmer's static allocation [0, shared_size).  A profile with no
+    # static allocation gets no user smem ops — emitting them at offset 0
+    # would write *outside* the declared region, exactly where RegDem's
+    # demoted-register slots start (eq. 1 puts them at the end of the
+    # static allocation), silently corrupting any demoted value.
+    smem_ops = profile.smem_ops_per_iter if profile.shared_size >= 4 else 0
+    for j in range(smem_ops):
         t = temps[(j + 1) % len(temps)]
-        off = (4 * j * 32) % max(profile.shared_size, 4)
+        off = (4 * j * 32) % profile.shared_size
         if j % 2 == 0:
             emit("STS", srcs=[R_TID, fp32_state[j % len(fp32_state)] if fp32_state else temps[0]], offset=off)
         else:

@@ -205,6 +205,16 @@ def _launch_occupancy(kernel: Kernel, sm: SMConfig) -> float:
     return min(1.0, total_warps / (sm.num_sms * sm.max_warps))
 
 
+def achieved_occupancy(kernel: Kernel, sm: Optional[SMConfig] = None) -> float:
+    """Achieved-occupancy estimate: the theoretical ceiling capped by what
+    the launch size can actually fill.  The single definition shared by
+    :func:`predict` and the autotuning search, so both paths always score
+    variants under the same occupancy model."""
+    if sm is None:
+        sm = _arch_of(kernel).sm
+    return min(occupancy_of(kernel, sm).occupancy, _launch_occupancy(kernel, sm))
+
+
 def predict(
     variants: Dict[str, Kernel],
     sm: Optional[SMConfig] = None,
@@ -223,10 +233,7 @@ def predict(
     def _sm(k: Kernel) -> SMConfig:
         return sm if sm is not None else _arch_of(k).sm
 
-    occs = {
-        n: min(occupancy_of(k, _sm(k)).occupancy, _launch_occupancy(k, _sm(k)))
-        for n, k in variants.items()
-    }
+    occs = {n: achieved_occupancy(k, _sm(k)) for n, k in variants.items()}
     occ_max = max(occs.values())
     preds: List[Prediction] = []
     for n, k in variants.items():
@@ -243,6 +250,31 @@ def predict(
 
 def predict_naive(variants: Dict[str, Kernel]) -> str:
     return min(variants, key=lambda n: naive_stalls(variants[n]))
+
+
+def ranking_agreement(
+    predicted: Dict[str, float], measured: Dict[str, float]
+) -> float:
+    """Pairwise ordering agreement between a predicted cost ranking and a
+    measured one (the §5 accuracy claim, as one number).
+
+    For every unordered pair of variants present in both dicts, the pair is
+    *concordant* when the predictor orders it the same way the measurement
+    does (both tie, or both strictly agree on which is cheaper).  Returns
+    concordant / total pairs, 1.0 when fewer than two variants overlap.
+    This is what the autotuning search and ``BENCH_search.json`` report as
+    ``agreement``, and what the predictor-fidelity test pins.
+    """
+    names = sorted(set(predicted) & set(measured))
+    pairs = concordant = 0
+    for i, a in enumerate(names):
+        for b in names[i + 1 :]:
+            pairs += 1
+            dp = predicted[a] - predicted[b]
+            dm = measured[a] - measured[b]
+            if (dp == 0 and dm == 0) or dp * dm > 0:
+                concordant += 1
+    return concordant / pairs if pairs else 1.0
 
 
 if __name__ == "__main__":  # pragma: no cover

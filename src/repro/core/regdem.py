@@ -104,16 +104,24 @@ def demote(
 # ---------------------------------------------------------------------------
 
 
-def auto_targets(kernel: Kernel) -> List[int]:
+def auto_targets(kernel: Kernel, max_targets: Optional[int] = None) -> List[int]:
+    """Occupancy-cliff register targets for ``kernel`` under its own
+    architecture's SM limits and spill budget, best-first.
+
+    ``max_targets`` truncates the ladder (the autotuning search uses it to
+    bound the variant space per kernel; ``None`` keeps every cliff)."""
     from repro.arch import arch_of
 
     from .occupancy import spill_targets
 
     arch = arch_of(kernel)
-    return spill_targets(
+    targets = spill_targets(
         kernel.reg_count,
         kernel.threads_per_block,
         kernel.shared_size,
         available_smem=arch.smem_spill_limit - kernel.shared_size,
         sm=arch.sm,
     )
+    if max_targets is not None:
+        targets = targets[:max_targets]
+    return targets

@@ -1,0 +1,567 @@
+"""Predictor-guided parallel autotuning search over the RegDem variant space.
+
+The paper's pipeline is "generate variants, let the compile-time predictor
+pick one" (§4-§5) over a fixed, hand-picked variant set.  This module
+searches the much larger space the machinery already supports:
+
+* every :mod:`repro.core.candidates` strategy (``static``/``cfg``/``conflict``),
+* the full :func:`repro.core.regdem.auto_targets` occupancy-cliff ladder,
+* the :class:`repro.core.passes.RegDemOptions` knobs (RDV bank-conflict
+  avoidance, the §3.4.2 enhancement passes),
+* every registered :mod:`repro.arch` backend the kernel can retarget to.
+
+Exhaustively simulating that space is what the predictor exists to avoid, so
+the search is staged:
+
+1. **enumerate** the space (cheap descriptors, nothing built yet);
+2. **beam** — build one probe variant per (arch, target, strategy) and score
+   it with the compile-time predictor (:func:`~repro.core.predictor.
+   estimate_stalls` + occupancy, eq. 2/3 — no simulation), keeping the
+   ``beam_width`` best;
+3. **expand** the option knobs for beam survivors only, predictor-scored the
+   same way;
+4. **confirm** the global ``top_k`` (plus every ``nvcc`` baseline and any
+   caller-supplied anchor variants) on the event-driven simulator through
+   :class:`~repro.core.simcache.SimCache`, and ship the variant with the
+   fewest simulated cycles.
+
+Stages 2-4 fan out over a **deterministic process pool**: tasks are pure
+functions of their payload, submitted and joined in enumeration order, each
+worker process is seeded once from ``config.seed`` at startup (hygiene —
+the tasks themselves never draw randomness, and the caller's in-process
+RNG state is never touched), and each task measures into a private
+:class:`SimCache` whose entries are merged into the parent cache on
+join (first writer wins) — so the result, the report, and the final cache
+contents are identical for 1 worker and N workers.  ``workers`` is therefore
+deliberately **not** part of :meth:`SearchConfig.signature`, and repeated
+tuning of the same content is a pure :class:`~repro.core.translator.
+TranslationCache` hit.
+
+``SEARCH_TOLERANCE`` documents the contract the differential tests hold the
+beam to: the chosen variant's simulated cycles stay within 5% of the
+exhaustive simulate-everything optimum (the predictor's §5 accuracy claim —
+the paper reaches 99% of oracle performance — leaves that much room for
+pruning error).
+"""
+
+from __future__ import annotations
+
+import multiprocessing
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .candidates import STRATEGIES, spillable
+from .isa import Kernel
+from .passes import RegDemOptions
+from .predictor import achieved_occupancy, f_occupancy, ranking_agreement
+from .regdem import auto_targets, demote
+from .simcache import DEFAULT_SIM_CACHE, SimCache
+
+#: Relative simulated-cycle slack the beam search is allowed vs exhaustive
+#: ground truth (pinned by the differential tests).
+SEARCH_TOLERANCE = 0.05
+
+
+@dataclass(frozen=True)
+class SearchConfig:
+    """Knobs of the autotuning search.
+
+    Everything except ``workers`` is part of :meth:`signature` (the
+    translation-cache key): the pool size affects wall time only, never the
+    result — pinned by the determinism property test.
+    """
+
+    #: candidate strategies to probe (§3.4.3)
+    strategies: Tuple[str, ...] = STRATEGIES
+    #: arch registry names to retarget to; ``None`` = every registered arch
+    archs: Optional[Tuple[str, ...]] = None
+    #: truncate the auto_targets ladder per arch (None = every cliff)
+    max_targets: Optional[int] = None
+    #: sweep all 2^4 option-flag combinations per beam survivor instead of
+    #: the grouped Fig.-7 dimensions (bank avoidance x enhancements)
+    full_options: bool = False
+    #: (arch, target, strategy) probes kept after predictor scoring
+    beam_width: int = 6
+    #: variants confirmed on the simulator (baselines/anchors ride free)
+    top_k: int = 4
+    #: process-pool size; <=1 runs in-process (identical results either way)
+    workers: int = 0
+    #: pool-worker RNG seed (hygiene only: no task draws randomness)
+    seed: int = 0
+    #: pass-pipeline self-check policy for every variant built
+    verify: str = "final"
+
+    def signature(self) -> tuple:
+        """Everything that determines the search *result* (cache key).
+
+        ``workers`` and ``seed`` are deliberately absent: neither changes
+        the outcome (the tasks are pure and never draw randomness), so
+        tuning the same content under a different pool size or seed must be
+        a cache hit, not a re-search."""
+        return (
+            tuple(self.strategies),
+            None if self.archs is None else tuple(self.archs),
+            self.max_targets,
+            self.full_options,
+            self.beam_width,
+            self.top_k,
+            self.verify,
+        )
+
+
+@dataclass
+class ScoredVariant:
+    """One predictor-scored point of the search space."""
+
+    label: str
+    arch: str
+    #: demotion register target (None for baselines/anchors)
+    target: Optional[int]
+    #: RegDemOptions label (None for baselines/anchors)
+    options: Optional[str]
+    regs: int
+    demoted_words: int
+    occupancy: float
+    #: raw whole-program stall estimate at ``occupancy`` (eq. 2)
+    stalls: float
+    #: eq.-3 adjusted estimate, comparable within one architecture
+    adjusted: float = 0.0
+    #: predicted cost relative to the same arch's ``nvcc`` baseline — the
+    #: ranking metric.  Cycle and stall counts of different architectures
+    #: are different units (Volta's latency model roughly halves Maxwell's
+    #: cycle counts for the same program), so the search compares variants
+    #: by how much they beat *their own* arch's do-nothing option.
+    rel: float = 1.0
+    #: search stage that produced it: baseline | beam | expand | anchor
+    stage: str = "beam"
+    #: simulated cycles, filled for confirmed variants only
+    cycles: Optional[int] = None
+
+    def to_json(self) -> dict:
+        return {
+            "label": self.label,
+            "arch": self.arch,
+            "target": self.target,
+            "options": self.options,
+            "regs": self.regs,
+            "demoted_words": self.demoted_words,
+            "occupancy": round(self.occupancy, 6),
+            "stalls": round(self.stalls, 3),
+            "adjusted": round(self.adjusted, 3),
+            "rel": round(self.rel, 6),
+            "stage": self.stage,
+            "cycles": self.cycles,
+        }
+
+
+@dataclass
+class SearchReport:
+    """Everything one kernel's search did and found.
+
+    :meth:`to_json` is deterministic (wall-clock time excluded), which is
+    what lets a tuned container embed the report as a ``.note`` section and
+    still be byte-identical across repeat runs.
+    """
+
+    kernel_name: str
+    input_arch: str
+    chosen: str
+    #: what the predictor alone would have shipped (argmin adjusted)
+    predictor_choice: str
+    #: the do-nothing option, always confirmed
+    baseline: str
+    #: enumerable size of the widened space (demotions + baselines)
+    space_size: int
+    #: demotion pipelines actually run (beam + expand)
+    explored: int
+    #: variants confirmed on the simulator
+    simulated: int
+    beam: List[str] = field(default_factory=list)
+    #: predictor-vs-simulator ranking agreement over the confirmed set
+    #: (orderings compared on baseline-relative cost)
+    agreement: float = 1.0
+    variants: List[ScoredVariant] = field(default_factory=list)
+    #: label -> simulated cycles for every confirmed variant
+    cycles: Dict[str, int] = field(default_factory=dict)
+    #: simulated speedup of the chosen variant over its arch's baseline
+    speedup: float = 1.0
+    #: best confirmed variant per architecture
+    per_arch: Dict[str, str] = field(default_factory=dict)
+    seconds: float = 0.0
+
+    def to_json(self) -> dict:
+        return {
+            "kernel": self.kernel_name,
+            "input_arch": self.input_arch,
+            "chosen": self.chosen,
+            "predictor_choice": self.predictor_choice,
+            "baseline": self.baseline,
+            "space_size": self.space_size,
+            "explored": self.explored,
+            "simulated": self.simulated,
+            "beam": list(self.beam),
+            "agreement": round(self.agreement, 4),
+            "speedup": round(self.speedup, 4),
+            "per_arch": dict(sorted(self.per_arch.items())),
+            "cycles": dict(sorted(self.cycles.items())),
+            "variants": [v.to_json() for v in self.variants],
+        }
+
+
+@dataclass
+class SearchOutcome:
+    """The winning kernel plus the full search report."""
+
+    kernel: Kernel
+    report: SearchReport
+
+
+# ---------------------------------------------------------------------------
+# Pure worker tasks (module-level: picklable under fork and spawn)
+# ---------------------------------------------------------------------------
+
+
+def _expand_one(payload: tuple) -> tuple:
+    """Build + predictor-score one demotion variant.
+
+    Pure function of the payload; runs identically in-process and in a pool
+    worker.  Returns ``(index, kernel_blob, regs, demoted_words, occupancy,
+    raw_stalls, cache_export)``.
+    """
+    (index, base_blob, target, strategy, flags, verify) = payload
+    from repro.binary import container
+
+    base = container.loads(base_blob)
+    bank, elim, resched, subst = flags
+    opts = RegDemOptions(
+        candidate_strategy=strategy,
+        bank_avoid=bank,
+        elim_redundant=elim,
+        reschedule=resched,
+        substitute=subst,
+    )
+    res = demote(base, target, opts, verify=verify)
+    cache = SimCache()
+    occ = achieved_occupancy(res.kernel)
+    stalls = cache.estimate_stalls(res.kernel, occ)
+    return (
+        index,
+        container.dumps(res.kernel),
+        res.kernel.reg_count,
+        res.demoted_words,
+        occ,
+        stalls,
+        cache.export(),
+    )
+
+
+def _seed_worker(seed: int) -> None:
+    """Pool-worker initializer: seed the process RNG once.  The search
+    tasks are deterministic and never draw from it — this is hygiene for
+    anything else the worker might import — and it runs only in child
+    processes, so the caller's in-process ``random`` state is untouched."""
+    random.seed(seed)
+
+
+def _simulate_one(payload: tuple) -> tuple:
+    """Simulate one confirmed variant; returns ``(index, SimResult,
+    cache_export)``."""
+    (index, blob) = payload
+    from repro.binary import container
+
+    kernel = container.loads(blob)
+    cache = SimCache()
+    res = cache.simulate(kernel)
+    return index, res, cache.export()
+
+
+def _pool_map(fn, payloads: Sequence[tuple], workers: int, seed: int = 0) -> list:
+    """Run ``fn`` over ``payloads`` with deterministic result ordering.
+
+    ``workers <= 1`` (or a single payload) runs in-process through the very
+    same task functions, so pool size can never change a result — only
+    completion time.  Results come back in submission order regardless of
+    which worker finished first.
+    """
+    if workers <= 1 or len(payloads) <= 1:
+        return [fn(p) for p in payloads]
+    try:
+        ctx = multiprocessing.get_context("fork")
+    except ValueError:  # pragma: no cover - non-POSIX fallback
+        ctx = multiprocessing.get_context("spawn")
+    with ctx.Pool(
+        processes=min(workers, len(payloads)),
+        initializer=_seed_worker,
+        initargs=(seed,),
+    ) as pool:
+        return pool.map(fn, payloads, chunksize=1)
+
+
+# ---------------------------------------------------------------------------
+# The search driver
+# ---------------------------------------------------------------------------
+
+
+def _flag_combos(full: bool) -> List[Tuple[bool, bool, bool, bool]]:
+    """Option-knob combinations, probe (all-on) first.
+
+    Grouped mode is the Fig.-7 ablation grid: bank-conflict avoidance x
+    the §3.4.2 enhancement passes as one dimension.  ``full`` sweeps all
+    2^4 flag combinations (the paper's exhaustive search).
+    """
+    if full:
+        combos = [
+            (b, e, r, s)
+            for b in (True, False)
+            for e in (True, False)
+            for r in (True, False)
+            for s in (True, False)
+        ]
+    else:
+        combos = [(b, e, e, e) for b in (True, False) for e in (True, False)]
+    return combos
+
+
+def _resolve_archs(kernel: Kernel, config: SearchConfig) -> List[str]:
+    """Canonical arch names to search, input arch first, rest sorted."""
+    from repro.arch import arch_names, arch_of, get_arch
+
+    own = arch_of(kernel).name
+    if config.archs is None:
+        names = set(arch_names())
+    else:
+        names = {get_arch(a).name for a in config.archs}
+    rest = sorted(n for n in names if n != own)
+    return ([own] if own in names else []) + rest
+
+
+def search(
+    kernel: Kernel,
+    config: Optional[SearchConfig] = None,
+    extra_variants: Optional[Dict[str, Kernel]] = None,
+    cache: Optional[SimCache] = None,
+) -> SearchOutcome:
+    """Autotune one kernel over the widened variant space.
+
+    ``extra_variants`` (label -> kernel) are *anchors*: always confirmed on
+    the simulator alongside the searched top-k, so the winner is guaranteed
+    no worse than any of them (the benchmark harness anchors the fixed §5.3
+    variant set this way).  ``cache`` defaults to the process-wide
+    :data:`~repro.core.simcache.DEFAULT_SIM_CACHE`.
+    """
+    from repro.arch import arch_of, retarget
+    from repro.binary import container
+
+    config = config or SearchConfig()
+    cache = cache if cache is not None else DEFAULT_SIM_CACHE
+    t0 = time.perf_counter()
+
+    own = arch_of(kernel).name
+    archs = _resolve_archs(kernel, config)
+    # the do-nothing option is always on the table, even when the caller
+    # restricted the search to foreign archs
+    base_archs = archs if own in archs else [own] + archs
+
+    bases: Dict[str, Kernel] = {}
+    blobs: Dict[str, bytes] = {}
+    for arch in base_archs:
+        base = kernel if arch == own else retarget(kernel, arch)
+        bases[arch] = base
+        blobs[arch] = container.dumps(base)
+
+    combos = _flag_combos(config.full_options)
+    scored: Dict[str, ScoredVariant] = {}
+    kernels: Dict[str, Kernel] = {}
+
+    # -- baselines (scored in-process: no pipeline to run) --------------------
+    for arch in base_archs:
+        base = bases[arch]
+        label = f"{arch}/nvcc"
+        occ = achieved_occupancy(base)
+        scored[label] = ScoredVariant(
+            label=label,
+            arch=arch,
+            target=None,
+            options=None,
+            regs=base.reg_count,
+            demoted_words=0,
+            occupancy=occ,
+            stalls=cache.estimate_stalls(base, occ),
+            stage="baseline",
+        )
+        kernels[label] = base
+
+    # -- stage 1: enumerate + probe (one default-options demotion per
+    #    (arch, target, strategy)) ---------------------------------------------
+    probe_flags = combos[0]
+    specs: List[Tuple[str, int, str, Tuple[bool, bool, bool, bool]]] = []
+    space_size = len(base_archs)  # the baselines
+    for arch in archs:
+        base = bases[arch]
+        if not spillable(base):
+            continue
+        targets = auto_targets(base, max_targets=config.max_targets)
+        space_size += len(targets) * len(config.strategies) * len(combos)
+        for tgt in targets:
+            for strat in config.strategies:
+                specs.append((arch, tgt, strat, probe_flags))
+
+    def run_stage(stage_specs, stage_name):
+        payloads = [
+            (i, blobs[arch], tgt, strat, flags, config.verify)
+            for i, (arch, tgt, strat, flags) in enumerate(stage_specs)
+        ]
+        results = _pool_map(_expand_one, payloads, config.workers, config.seed)
+        for (arch, tgt, strat, flags), res in zip(stage_specs, results):
+            (_, blob, regs, words, occ, stalls, export) = res
+            cache.merge(export)
+            opts_label = RegDemOptions(
+                candidate_strategy=strat,
+                bank_avoid=flags[0],
+                elim_redundant=flags[1],
+                reschedule=flags[2],
+                substitute=flags[3],
+            ).label()
+            label = f"{arch}/regdem@{tgt}:{opts_label}"
+            scored[label] = ScoredVariant(
+                label=label,
+                arch=arch,
+                target=tgt,
+                options=opts_label,
+                regs=regs,
+                demoted_words=words,
+                occupancy=occ,
+                stalls=stalls,
+                stage=stage_name,
+            )
+            kernels[label] = container.loads(blob)
+
+    run_stage(specs, "beam")
+
+    own_baseline = f"{own}/nvcc"
+
+    def adjust() -> None:
+        """eq. 3 adjustment plus baseline normalization.
+
+        ``adjusted`` applies the occupancy-curve correction (comparable
+        within one arch); ``rel`` divides by the same arch's ``nvcc``
+        baseline, which is what makes scores comparable *across* archs —
+        different architectures' stall/cycle counts are different units.
+        """
+        occ_max = max(v.occupancy for v in scored.values())
+        denom = f_occupancy(occ_max)
+        for v in scored.values():
+            v.adjusted = f_occupancy(v.occupancy) / denom * v.stalls
+        for v in scored.values():
+            # every scored arch has a baseline: search archs are a subset of
+            # base_archs and anchors are validated on entry
+            base = scored[f"{v.arch}/nvcc"]
+            v.rel = v.adjusted / base.adjusted if base.adjusted else 1.0
+
+    adjust()
+    probes = [v for v in scored.values() if v.stage == "beam"]
+    beam = sorted(probes, key=lambda v: (v.rel, v.label))[: config.beam_width]
+    beam_labels = [v.label for v in beam]
+
+    # -- stage 2: expand the option knobs for beam survivors ------------------
+    expand_specs = [
+        (v.arch, v.target, v.options.split(":", 1)[0], flags)
+        for v in beam
+        for flags in combos[1:]
+    ]
+    run_stage(expand_specs, "expand")
+
+    # -- anchors ---------------------------------------------------------------
+    for label, k in sorted((extra_variants or {}).items()):
+        if label in scored:
+            continue
+        anchor_arch = arch_of(k).name
+        if anchor_arch not in bases:
+            # without that arch's nvcc baseline there is nothing comparable
+            # to rank the anchor against (cross-arch cycle counts are
+            # different units), and the "winner is no worse than any
+            # anchor" guarantee would silently break
+            raise ValueError(
+                f"anchor {label!r} is on arch {anchor_arch!r}, which is not "
+                f"part of this search ({sorted(bases)}); include it in "
+                "SearchConfig.archs or retarget the anchor"
+            )
+        occ = achieved_occupancy(k)
+        scored[label] = ScoredVariant(
+            label=label,
+            arch=anchor_arch,
+            target=None,
+            options=None,
+            regs=k.reg_count,
+            demoted_words=0,
+            occupancy=occ,
+            stalls=cache.estimate_stalls(k, occ),
+            stage="anchor",
+        )
+        kernels[label] = k
+
+    adjust()
+
+    # -- stage 3: confirm on the simulator ------------------------------------
+    demoted = [v for v in scored.values() if v.stage in ("beam", "expand")]
+    top = sorted(demoted, key=lambda v: (v.rel, v.label))[: config.top_k]
+    confirm = sorted(
+        {v.label for v in scored.values() if v.stage in ("baseline", "anchor")}
+        | {v.label for v in top}
+    )
+    pending: List[Tuple[int, bytes]] = []
+    cycles: Dict[str, int] = {}
+    for i, label in enumerate(confirm):
+        hit = cache.peek_simulate(kernels[label])
+        if hit is not None:
+            cycles[label] = hit.total_cycles
+        else:
+            pending.append((i, container.dumps(kernels[label])))
+    sim_results = _pool_map(_simulate_one, pending, config.workers, config.seed)
+    for (i, _), (_, res, export) in zip(pending, sim_results):
+        cache.merge(export)
+        cycles[confirm[i]] = res.total_cycles
+    for label in confirm:
+        scored[label].cycles = cycles[label]
+
+    # measured cost relative to the same arch's confirmed baseline — the
+    # cross-arch-comparable ground truth mirroring ScoredVariant.rel
+    def ratio(label: str) -> float:
+        return cycles[label] / cycles[f"{scored[label].arch}/nvcc"]
+
+    # exact ties go to the input arch's do-nothing baseline, then by label
+    chosen = min(confirm, key=lambda lb: (ratio(lb), lb != own_baseline, lb))
+    predictor_choice = min(
+        scored.values(), key=lambda v: (v.rel, v.label != own_baseline, v.label)
+    ).label
+    agreement = ranking_agreement(
+        {lb: scored[lb].rel for lb in confirm}, {lb: ratio(lb) for lb in confirm}
+    )
+    per_arch: Dict[str, str] = {}
+    for lb in confirm:
+        a = scored[lb].arch
+        if a not in per_arch or (ratio(lb), lb) < (ratio(per_arch[a]), per_arch[a]):
+            per_arch[a] = lb
+
+    report = SearchReport(
+        kernel_name=kernel.name,
+        input_arch=own,
+        chosen=chosen,
+        predictor_choice=predictor_choice,
+        baseline=own_baseline,
+        space_size=space_size,
+        explored=len(specs) + len(expand_specs),
+        simulated=len(confirm),
+        beam=beam_labels,
+        agreement=agreement,
+        variants=sorted(scored.values(), key=lambda v: (v.rel, v.label)),
+        cycles=cycles,
+        speedup=1.0 / ratio(chosen) if ratio(chosen) else 1.0,
+        per_arch=per_arch,
+        seconds=time.perf_counter() - t0,
+    )
+    winner = kernels[chosen]
+    # never hand back an alias of the caller's kernel or an anchor
+    return SearchOutcome(kernel=winner.copy(), report=report)

@@ -141,6 +141,26 @@ class SimCache:
         self._put(self._sims, key, render, res)
         return dataclasses.replace(res)
 
+    def peek_simulate(
+        self,
+        kernel: Kernel,
+        sm: Optional[SMConfig] = None,
+        max_cycles: int = 50_000_000,
+    ) -> Optional[SimResult]:
+        """Return the cached :class:`SimResult` for ``kernel`` if present,
+        else ``None`` — without running the simulator and without touching
+        the hit/miss counters (used by the search engine to partition work
+        before fanning the remainder out to a process pool)."""
+        if sm is None:
+            from repro.arch import arch_of
+
+            sm = arch_of(kernel).sm
+        key = (self.content_key(kernel), sm, max_cycles)
+        entry = self._sims.get(key)
+        if entry is not None and entry[0] == _guard(kernel):
+            return dataclasses.replace(entry[1])
+        return None
+
     def estimate_stalls(self, kernel: Kernel, occupancy: float) -> float:
         """:func:`repro.core.predictor.estimate_stalls`, content-cached.
 
@@ -158,6 +178,33 @@ class SimCache:
         val = estimate_stalls(kernel, occupancy)
         self._put(self._stalls, key, render, val)
         return val
+
+    # -- pool-worker cache exchange -------------------------------------------
+
+    def export(self) -> Dict[str, dict]:
+        """Snapshot every entry as a picklable payload for :meth:`merge`.
+
+        A search-pool worker runs with a fresh private cache, does its
+        measurements, and ships the entries back to the parent so the
+        process-wide cache ends a parallel search exactly as warm as a
+        serial one would leave it."""
+        return {"sims": dict(self._sims), "stalls": dict(self._stalls)}
+
+    def merge(self, exported: Dict[str, dict]) -> int:
+        """Adopt entries from an :meth:`export` payload; first writer wins
+        (an existing entry is never overwritten, so the merge result does
+        not depend on worker completion order).  Returns the number of
+        entries added."""
+        added = 0
+        for table, incoming in (
+            (self._sims, exported.get("sims", {})),
+            (self._stalls, exported.get("stalls", {})),
+        ):
+            for key in sorted(incoming, key=repr):
+                if key not in table:
+                    self._put(table, key, *incoming[key])
+                    added += 1
+        return added
 
 
 #: Process-wide cache shared by the benchmark harness, the predictor, and

@@ -47,6 +47,7 @@ from .passes import PassStat, PassVerificationError
 from .predictor import predict
 from .regdem import RegDemOptions, RegDemResult, auto_targets, demote
 from .sched import verify_schedule
+from .search import SearchConfig, SearchReport, search
 
 
 class TranslationError(RuntimeError):
@@ -63,6 +64,10 @@ class TranslationReport:
     results: Dict[str, RegDemResult] = field(default_factory=dict)
     #: per-pass diagnostics/timings per considered variant label
     pass_stats: Dict[str, List[PassStat]] = field(default_factory=dict)
+    #: autotuning search report when this translation came from
+    #: :meth:`TranslationService.tune` (``predictions`` then holds each
+    #: variant's baseline-relative predicted cost)
+    search: Optional[SearchReport] = None
 
     @property
     def chosen_kernel(self) -> Kernel:
@@ -230,12 +235,7 @@ class TranslationCache:
         return self.hits / total if total else 0.0
 
     @staticmethod
-    def key(
-        kernel: Kernel,
-        target_regs: Optional[int],
-        options: Optional[List[RegDemOptions]],
-        use_predictor: bool,
-    ) -> tuple:
+    def content_crc(kernel: Kernel) -> int:
         # kernels decoded from a v2 container carry their verified content
         # CRC; recompute (one text encode) only for v1/in-memory kernels
         crc = getattr(kernel, "content_crc", None)
@@ -243,8 +243,25 @@ class TranslationCache:
             from repro.binary.container import kernel_crc
 
             crc = kernel_crc(kernel)
+        return crc
+
+    @staticmethod
+    def key(
+        kernel: Kernel,
+        target_regs: Optional[int],
+        options: Optional[List[RegDemOptions]],
+        use_predictor: bool,
+    ) -> tuple:
         opt_sig = None if options is None else tuple(o.label() for o in options)
-        return (crc, target_regs, opt_sig, use_predictor)
+        return (TranslationCache.content_crc(kernel), target_regs, opt_sig, use_predictor)
+
+    @staticmethod
+    def tune_key(kernel: Kernel, config: SearchConfig) -> tuple:
+        """Cache key for :meth:`TranslationService.tune` results: content CRC
+        plus everything that determines the search outcome.  The pool size is
+        not in :meth:`SearchConfig.signature`, so a result tuned with one
+        worker is a hit for a later N-worker call (and vice versa)."""
+        return (TranslationCache.content_crc(kernel), "tune", config.signature())
 
     def get(self, key: tuple, kernel: Kernel) -> Optional[Tuple[Kernel, TranslationReport]]:
         entry = self._entries.get(key)
@@ -354,6 +371,73 @@ class TranslationService:
             cache_misses=self.cache.misses - misses0,
         )
 
+    def tune(
+        self, data: bytes, config: Optional[SearchConfig] = None
+    ) -> Tuple[bytes, BatchTranslationReport]:
+        """Autotune every kernel in the container (:func:`repro.core.search.
+        search`) instead of the fixed predictor-only pipeline.
+
+        Each kernel comes back as its best-found variant; the per-kernel
+        :class:`~repro.core.search.SearchReport` rides in the emitted
+        container as a ``.note.search.<index>.<name>`` JSON section
+        (:func:`repro.binary.container.read_notes`) and on
+        :attr:`TranslationReport.search`.  Results are served from the same
+        :class:`TranslationCache` as plain translations, keyed by content CRC
+        + search signature: re-tuning known content runs **zero** pipeline
+        passes and re-emits byte-identical container bytes.
+        """
+        import json
+
+        from repro.binary import container
+        from repro.binary.roundtrip import RoundTripError, verified_dumps_many
+
+        config = config or SearchConfig()
+        kernels = container.loads_many(data)
+        hits0, misses0 = self.cache.hits, self.cache.misses
+        chosen_list: List[Kernel] = []
+        reports: List[TranslationReport] = []
+        cached_flags: List[bool] = []
+        notes: Dict[str, bytes] = {}
+        for i, kernel in enumerate(kernels):
+            key = self.cache.tune_key(kernel, config)
+            entry = self.cache.get(key, kernel)
+            if entry is not None:
+                chosen, report = entry
+                cached_flags.append(True)
+            else:
+                outcome = search(kernel, config)
+                report = TranslationReport(
+                    kernel_name=kernel.name,
+                    baseline_regs=kernel.reg_count,
+                    chosen=outcome.report.chosen,
+                    considered=sorted(v.label for v in outcome.report.variants),
+                    predictions={
+                        v.label: v.rel for v in outcome.report.variants
+                    },
+                    search=outcome.report,
+                )
+                chosen = outcome.kernel
+                self.cache.put(key, kernel, chosen, report)
+                cached_flags.append(False)
+            chosen_list.append(chosen)
+            reports.append(report)
+            # SearchReport.to_json is deterministic (no wall times), so a
+            # cache-hit re-tune emits byte-identical notes
+            notes[f"search.{i}.{kernel.name}"] = json.dumps(
+                report.search.to_json(), sort_keys=True
+            ).encode("utf-8")
+
+        try:
+            out = verified_dumps_many(chosen_list, notes=notes)
+        except RoundTripError as exc:
+            raise TranslationError(str(exc)) from exc
+        return out, BatchTranslationReport(
+            reports=reports,
+            cached=cached_flags,
+            cache_hits=self.cache.hits - hits0,
+            cache_misses=self.cache.misses - misses0,
+        )
+
 
 def translate_binary(
     data: bytes,
@@ -362,6 +446,8 @@ def translate_binary(
     use_predictor: bool = True,
     cache: Optional[TranslationCache] = None,
     verify: str = "final",
+    tune: bool = False,
+    search_config: Optional[SearchConfig] = None,
 ) -> Tuple[bytes, Union[TranslationReport, BatchTranslationReport]]:
     """Binary->binary pyReDe: container bytes in, container bytes out.
 
@@ -370,6 +456,11 @@ def translate_binary(
     reassembles the chosen variants (the unmodified input kernel where the
     predictor keeps the nvcc baseline).  The emitted container passes the
     round-trip oracle before being returned.
+
+    ``tune=True`` routes through :meth:`TranslationService.tune`: the full
+    predictor-guided autotuning search (``search_config``, default
+    :class:`~repro.core.search.SearchConfig`) replaces the fixed pipeline,
+    and each kernel's search report is embedded as a container note.
 
     For a single-kernel container the second return value is that kernel's
     :class:`TranslationReport` (the historical contract); for a multi-kernel
@@ -382,7 +473,25 @@ def translate_binary(
         cache=cache,
         verify=verify,
     )
-    out, batch = service.translate(data)
+    if tune:
+        # the search replaces the fixed pipeline wholesale: silently
+        # accepting its knobs would let a caller believe a constraint took
+        # effect when it did not
+        if target_regs is not None or options is not None or not use_predictor:
+            raise ValueError(
+                "tune=True replaces the fixed pipeline; target_regs/options/"
+                "use_predictor do not apply — configure search_config instead"
+            )
+        if search_config is None:
+            search_config = SearchConfig(verify=verify)
+        elif verify != "final" and verify != search_config.verify:
+            raise ValueError(
+                "conflicting verify policies: pass verify through "
+                "search_config when tuning"
+            )
+        out, batch = service.tune(data, search_config)
+    else:
+        out, batch = service.translate(data)
     if len(batch.reports) == 1:
         return out, batch.reports[0]
     return out, batch

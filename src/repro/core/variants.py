@@ -129,9 +129,30 @@ def make_variants(
     produces byte-identical kernels to ``"each"`` (regression-tested) at a
     fraction of the cost.  Pass ``"each"`` to fault-localize a broken pass.
     """
-    base = generate(profile)
-    target = profile.regdem_target
+    return make_variants_for(
+        generate(profile),
+        profile.regdem_target,
+        nvcc_spills=profile.nvcc_spills,
+        regdem_options=regdem_options,
+        verify=verify,
+    )
 
+
+def make_variants_for(
+    base: Kernel,
+    target: int,
+    nvcc_spills: int = 0,
+    regdem_options: Optional[RegDemOptions] = None,
+    verify: str = "final",
+) -> Dict[str, Variant]:
+    """The §5.3 variant matrix for a pre-built baseline kernel.
+
+    :func:`make_variants` is this applied to a freshly generated Table-1
+    profile; calling it directly lets the cross-arch benchmarks and the
+    autotuning search build the same comparison set for a *retargeted*
+    baseline (``repro.arch.retarget``), whose arch tag every pipeline pass
+    and the simulator then honour.
+    """
     out: Dict[str, Variant] = {}
     out["nvcc"] = Variant(name="nvcc", kernel=base)
 
@@ -144,7 +165,7 @@ def make_variants(
     # nvcc's remat capacity is bounded so that its local-spill count matches
     # the Table-1 "# Registers Spilled (nvcc)" column for this benchmark
     reduction = max(0, base.reg_count - target)
-    cap = max(0, reduction - profile.nvcc_spills)
+    cap = max(0, reduction - nvcc_spills)
 
     loc = aggressive(base, target, spill_space="local", max_remat=cap, verify=verify)
     loc.name = "local"

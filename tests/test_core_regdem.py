@@ -156,3 +156,31 @@ def test_random_kernels_demotable():
         res = demote(k, tgts[0])
         assert equivalent(k, res.kernel), seed
         assert verify_schedule(res.kernel) == [], seed
+
+
+def test_no_user_smem_traffic_without_static_allocation():
+    """Regression (found by the autotuning-search seed sweep): a generated
+    kernel with ``shared_size == 0`` must emit no user STS/LDS — offset 0
+    is where eq. 1 places the demoted-register slots, so such traffic
+    silently corrupted demoted values."""
+    from repro.core.kernelgen import Profile
+
+    prof = Profile(
+        name="nosmem", target_regs=40, threads_per_block=128, num_blocks=256,
+        shared_size=0, regdem_target=34, nvcc_spills=0, smem_ops_per_iter=2,
+    )
+    k = generate(prof)
+    assert {"STS", "LDS"} & {i.op for i in k.instructions()} == set()
+    res = demote(k, prof.regdem_target)
+    assert equivalent(k, res.kernel)
+
+
+def test_demotion_on_seed123_regression_kernel():
+    """The concrete kernel the bug was found on: random_profile(123) has
+    smem ops but no static shared allocation; demotion must stay
+    dataflow-equivalent under every candidate strategy."""
+    k = generate(random_profile(123))
+    for strategy in ("static", "cfg", "conflict"):
+        res = demote(k, 32, RegDemOptions(candidate_strategy=strategy))
+        assert equivalent(k, res.kernel), strategy
+        assert verify_schedule(res.kernel) == [], strategy

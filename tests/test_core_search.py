@@ -1,0 +1,288 @@
+"""Autotuning-search tests (repro.core.search).
+
+Three layers:
+
+* **differential** — on small ``kernelgen`` kernels, the beam-pruned search
+  must land within :data:`repro.core.search.SEARCH_TOLERANCE` of exhaustive
+  simulate-everything ground truth;
+* **golden** — the chosen variant names for all 9 paper benchmarks on both
+  arches are pinned in ``tests/golden/search_choices.json`` and must match a
+  live recompute *and* the committed ``BENCH_search.json``;
+* **service** — tuned containers embed their search reports as ``.note``
+  sections, and re-tuning known content is a pure translation-cache hit.
+"""
+
+import json
+import os
+
+import pytest
+
+from benchmarks import search_bench
+from repro.binary import dumps, loads_many, read_notes
+from repro.core.isa import Instr, Kernel, equivalent
+from repro.core.kernelgen import PAPER_BENCHMARKS, generate, random_profile
+from repro.core.regdem import auto_targets
+from repro.core.sched import schedule, verify_schedule
+from repro.core.search import (
+    SEARCH_TOLERANCE,
+    SearchConfig,
+    search,
+)
+from repro.core.simcache import SimCache
+from repro.core.translator import TranslationService
+
+GOLDEN_PATH = os.path.join(
+    os.path.dirname(__file__), "golden", "search_choices.json"
+)
+BENCH_SEARCH_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_search.json"
+)
+
+
+@pytest.fixture(scope="module")
+def golden_choices():
+    with open(GOLDEN_PATH) as fh:
+        return json.load(fh)
+
+
+@pytest.fixture(scope="module")
+def bench_search():
+    with open(BENCH_SEARCH_PATH) as fh:
+        return json.load(fh)
+
+
+@pytest.fixture(scope="module")
+def measured():
+    """One full 9-benchmarks x both-arches sweep, shared by the golden and
+    acceptance tests (the process-wide SimCache keeps it warm for both)."""
+    return search_bench.measure(workers=0)
+
+
+# ---------------------------------------------------------------------------
+# differential: beam search vs exhaustive ground truth
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [3, 11, 29])
+def test_search_within_tolerance_of_exhaustive(seed):
+    """The predictor-guided beam may prune, but the variant it ships must
+    simulate within the documented tolerance of the exhaustive optimum."""
+    k = generate(random_profile(seed))
+    if not auto_targets(k):
+        pytest.skip("profile has no occupancy cliff to search")
+    cache = SimCache()
+    exhaustive = search(
+        k,
+        SearchConfig(archs=("maxwell",), beam_width=10**6, top_k=10**6),
+        cache=cache,
+    )
+    # beam_width/top_k >= space mean nothing was pruned: every enumerated
+    # demotion was built and simulated
+    baselines = 1
+    assert exhaustive.report.explored == exhaustive.report.space_size - baselines
+    assert exhaustive.report.simulated == exhaustive.report.space_size
+
+    pruned = search(k, SearchConfig(archs=("maxwell",)), cache=cache)
+    truth = exhaustive.report.cycles[exhaustive.report.chosen]
+    got = pruned.report.cycles[pruned.report.chosen]
+    assert got <= truth * (1 + SEARCH_TOLERANCE)
+    # and the search never ships a semantics-breaking or unscheduled kernel
+    assert equivalent(k, pruned.kernel)
+    assert verify_schedule(pruned.kernel) == []
+
+
+def test_search_never_worse_than_doing_nothing():
+    k = generate(random_profile(5))
+    out = search(k, SearchConfig(archs=("maxwell",)), cache=SimCache())
+    base = out.report.cycles[out.report.baseline]
+    assert out.report.cycles[out.report.chosen] <= base
+
+
+# ---------------------------------------------------------------------------
+# golden: pinned chosen variants for the paper benchmarks on both arches
+# ---------------------------------------------------------------------------
+
+
+def test_golden_choices_cover_benchmarks_and_arches(golden_choices):
+    assert set(golden_choices) == set(PAPER_BENCHMARKS)
+    for per_arch in golden_choices.values():
+        assert sorted(per_arch) == ["maxwell", "volta"]
+
+
+def test_bench_search_json_matches_golden(golden_choices, bench_search):
+    """The committed BENCH_search.json must agree with the independent
+    golden file — a stale regeneration cannot silently shift the pins."""
+    for bench, per_arch in golden_choices.items():
+        for arch, chosen in per_arch.items():
+            assert bench_search["kernels"][bench][arch]["chosen"] == chosen, (
+                f"{bench}/{arch}"
+            )
+
+
+def test_golden_search_choices_recompute(golden_choices, measured):
+    """Live recompute of every (benchmark, arch) search matches the pins."""
+    for bench, per_arch in golden_choices.items():
+        for arch, chosen in per_arch.items():
+            assert measured["kernels"][bench][arch]["chosen"] == chosen, (
+                f"{bench}/{arch}"
+            )
+
+
+def test_search_beats_or_matches_fixed_pipeline_everywhere(measured):
+    """The PR acceptance criterion: the search-chosen variant is at least as
+    good (simulated cycles) as the fixed make_variants+predict baseline on
+    every benchmark x arch, and strictly better on at least one."""
+    strict = 0
+    for bench, per_arch in measured["kernels"].items():
+        for arch, row in per_arch.items():
+            assert row["cycles_chosen"] <= row["cycles_fixed"], f"{bench}/{arch}"
+            strict += row["cycles_chosen"] < row["cycles_fixed"]
+    assert strict >= 1
+    assert measured["summary"]["strict_wins"] == strict
+
+
+def test_measured_summary_matches_committed(measured, bench_search):
+    """Deterministic summary fields of a fresh sweep equal the committed
+    report (throughput/wall-time fields excluded)."""
+    for key in ("searches", "explored", "geomean_win", "strict_wins",
+                "mean_agreement"):
+        assert measured["summary"][key] == bench_search["summary"][key], key
+
+
+# ---------------------------------------------------------------------------
+# structure / edge cases
+# ---------------------------------------------------------------------------
+
+
+def _no_spill_kernel():
+    """Every register is ABI (live-in/out): nothing is demotable."""
+    k = Kernel(name="pinned", live_in={0, 1}, live_out={2}, num_blocks=64,
+               threads_per_block=64)
+    k.items = [
+        Instr("FADD", [2], [0, 1]),
+        Instr("STG", srcs=[1, 2]),
+        Instr("EXIT"),
+    ]
+    return schedule(k)
+
+
+def test_search_with_nothing_to_demote_keeps_baseline():
+    k = _no_spill_kernel()
+    out = search(k, SearchConfig(archs=("maxwell",)), cache=SimCache())
+    assert out.report.chosen == "maxwell/nvcc"
+    assert out.report.explored == 0
+    assert out.report.space_size == 1  # just the baseline
+    assert out.kernel.render() == k.render()
+    assert out.kernel is not k  # a copy, never an alias
+
+
+def test_search_report_json_is_deterministic_and_complete():
+    k = generate(random_profile(7))
+    r1 = search(k, SearchConfig(archs=("maxwell",)), cache=SimCache()).report
+    r2 = search(k, SearchConfig(archs=("maxwell",)), cache=SimCache()).report
+    assert r1.to_json() == r2.to_json()  # wall time excluded by contract
+    j = r1.to_json()
+    assert j["chosen"] in j["cycles"]
+    assert j["baseline"] in j["cycles"]
+    assert all(v["label"] for v in j["variants"])
+
+
+def test_search_identical_across_pool_sizes():
+    """1 worker vs N workers: byte-identical winning kernel, identical
+    report (the hypothesis suite sweeps this over random kernels; this is
+    the always-on pin)."""
+    k = generate(random_profile(42))
+    cfg = dict(max_targets=1, beam_width=3, top_k=2)
+    serial = search(k, SearchConfig(workers=0, **cfg), cache=SimCache())
+    pooled = search(k, SearchConfig(workers=3, **cfg), cache=SimCache())
+    assert dumps(serial.kernel) == dumps(pooled.kernel)
+    assert serial.report.to_json() == pooled.report.to_json()
+
+
+def test_workers_and_seed_not_part_of_config_signature():
+    """Neither knob changes the result, so neither may cause a cache miss."""
+    assert (
+        SearchConfig(workers=0).signature()
+        == SearchConfig(workers=8).signature()
+    )
+    assert (
+        SearchConfig(seed=0).signature() == SearchConfig(seed=99).signature()
+    )
+    assert (
+        SearchConfig(beam_width=2).signature()
+        != SearchConfig(beam_width=3).signature()
+    )
+
+
+def test_cross_arch_anchor_without_baseline_rejected():
+    """An anchor on an arch outside the search has no comparable baseline
+    (cross-arch cycles are different units) — reject instead of ranking it
+    against the wrong nvcc."""
+    from repro.arch import retarget
+
+    k = generate(random_profile(7))
+    foreign = retarget(k, "volta")
+    with pytest.raises(ValueError, match="volta"):
+        search(
+            k,
+            SearchConfig(archs=("maxwell",)),
+            extra_variants={"volta/foreign": foreign},
+            cache=SimCache(),
+        )
+
+
+def test_translate_binary_tune_rejects_fixed_pipeline_args():
+    from repro.core.translator import translate_binary
+
+    blob = dumps(generate(random_profile(7)))
+    with pytest.raises(ValueError, match="do not apply"):
+        translate_binary(blob, target_regs=32, tune=True)
+    with pytest.raises(ValueError, match="conflicting verify"):
+        translate_binary(
+            blob, tune=True, verify="each",
+            search_config=SearchConfig(archs=("maxwell",)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# service: tuned containers, notes, cache purity
+# ---------------------------------------------------------------------------
+
+
+def test_tune_embeds_search_notes_and_preserves_semantics():
+    kernels = [generate(random_profile(13)), generate(random_profile(21))]
+    blob = dumps(kernels)
+    svc = TranslationService()
+    out, batch = svc.tune(blob, SearchConfig(archs=("maxwell",)))
+    notes = read_notes(out)
+    decoded = loads_many(out)
+    assert len(decoded) == len(kernels)
+    for i, (orig, dec, rep) in enumerate(zip(kernels, decoded, batch.reports)):
+        assert equivalent(orig, dec)
+        assert rep.search is not None
+        note = json.loads(notes[f"search.{i}.{orig.name}"])
+        assert note == rep.search.to_json()
+        assert note["chosen"] == rep.chosen
+
+
+def test_retune_is_pure_cache_hit_and_byte_identical(monkeypatch):
+    from repro.core import passes as passes_mod
+
+    kernels = [generate(random_profile(33))]
+    blob = dumps(kernels)
+    svc = TranslationService()
+    cfg = SearchConfig(archs=("maxwell",))
+    out1, batch1 = svc.tune(blob, cfg)
+    assert batch1.cached == [False]
+
+    ran = []
+    orig_run = passes_mod.PassPipeline.run
+    monkeypatch.setattr(
+        passes_mod.PassPipeline,
+        "run",
+        lambda self, ctx: ran.append(1) or orig_run(self, ctx),
+    )
+    out2, batch2 = svc.tune(blob, cfg)
+    assert batch2.cached == [True]
+    assert ran == []  # zero pipeline passes on the cached path
+    assert out2 == out1  # byte-identical container, notes included

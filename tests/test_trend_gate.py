@@ -1,0 +1,121 @@
+"""CI perf-trend gate behaviour (benchmarks.trend_gate).
+
+Pins the warn-and-skip contract: a fresh report whose baseline was never
+committed (exactly the first CI run after a new benchmark section lands)
+must be reported and skipped, not crash the gate — while corrupt baselines,
+missing metrics, and genuine regressions stay hard failures.
+"""
+
+import json
+
+import pytest
+
+from benchmarks import trend_gate
+
+M_THROUGHPUT = [("BENCH_x.json", ("summary", "kernels_per_s"), "higher")]
+
+
+def _write(directory, fname, obj):
+    path = directory / fname
+    path.write_text(json.dumps(obj))
+    return path
+
+
+def test_within_tolerance_ok(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    _write(base, "BENCH_x.json", {"summary": {"kernels_per_s": 100.0}})
+    _write(fresh, "BENCH_x.json", {"summary": {"kernels_per_s": 95.0}})
+    rows = list(trend_gate.compare(str(base), str(fresh), 0.30, M_THROUGHPUT))
+    assert [r[3] for r in rows] == ["ok"]
+
+
+def test_regression_detected(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    _write(base, "BENCH_x.json", {"summary": {"kernels_per_s": 100.0}})
+    _write(fresh, "BENCH_x.json", {"summary": {"kernels_per_s": 50.0}})
+    rows = list(trend_gate.compare(str(base), str(fresh), 0.30, M_THROUGHPUT))
+    assert [r[3] for r in rows] == ["REGRESSED"]
+
+
+def test_missing_baseline_warns_and_skips(tmp_path):
+    """No committed baseline file at all: verdict no-baseline, no error."""
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    _write(fresh, "BENCH_x.json", {"summary": {"kernels_per_s": 50.0}})
+    rows = list(trend_gate.compare(str(base), str(fresh), 0.30, M_THROUGHPUT))
+    (label, baseline, val, verdict), = rows
+    assert verdict == "no-baseline"
+    assert baseline != baseline  # nan
+    assert val == 50.0
+
+
+def test_missing_baseline_gate_passes(tmp_path, monkeypatch, capsys):
+    """End to end through main(): first landing of a new BENCH_*.json must
+    exit 0 with a warning, alongside gated metrics that do have baselines."""
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    metrics = M_THROUGHPUT + [("BENCH_y.json", ("summary", "rate"), "higher")]
+    monkeypatch.setattr(trend_gate, "METRICS", metrics)
+    _write(base, "BENCH_y.json", {"summary": {"rate": 1.0}})
+    _write(fresh, "BENCH_y.json", {"summary": {"rate": 1.1}})
+    _write(fresh, "BENCH_x.json", {"summary": {"kernels_per_s": 50.0}})
+    code = trend_gate.main(["--baseline-dir", str(base), "--fresh-dir", str(fresh)])
+    captured = capsys.readouterr()
+    assert code == 0
+    assert "no-baseline" in captured.out
+    assert "no committed baseline" in captured.err
+
+
+def test_corrupt_baseline_still_errors(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    (base / "BENCH_x.json").write_text("{not json")
+    _write(fresh, "BENCH_x.json", {"summary": {"kernels_per_s": 50.0}})
+    with pytest.raises(trend_gate.GateError, match="corrupt"):
+        list(trend_gate.compare(str(base), str(fresh), 0.30, M_THROUGHPUT))
+
+
+def test_missing_fresh_still_errors(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    _write(base, "BENCH_x.json", {"summary": {"kernels_per_s": 100.0}})
+    with pytest.raises(trend_gate.GateError, match="missing report"):
+        list(trend_gate.compare(str(base), str(fresh), 0.30, M_THROUGHPUT))
+
+
+def test_missing_metric_in_existing_baseline_errors(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    _write(base, "BENCH_x.json", {"summary": {}})
+    _write(fresh, "BENCH_x.json", {"summary": {"kernels_per_s": 50.0}})
+    with pytest.raises(trend_gate.GateError, match="not found"):
+        list(trend_gate.compare(str(base), str(fresh), 0.30, M_THROUGHPUT))
+
+
+def test_search_metrics_are_gated():
+    """BENCH_search.json's headline metrics are wired into the default set."""
+    files = {fname for fname, _, _ in trend_gate.METRICS}
+    assert "BENCH_search.json" in files
+    paths = {
+        ".".join(path)
+        for fname, path, _ in trend_gate.METRICS
+        if fname == "BENCH_search.json"
+    }
+    assert paths == {
+        "summary.variants_per_s",
+        "summary.mean_agreement",
+        "summary.geomean_win",
+    }
+
+
+def test_gate_against_committed_baselines():
+    """The committed BENCH_*.json baselines gate against themselves (a
+    smoke check that every default metric exists in the committed files)."""
+    import os
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    rows = list(trend_gate.compare(root, root))
+    assert len(rows) == len(trend_gate.METRICS)
+    assert all(r[3] == "ok" for r in rows)
