@@ -18,10 +18,15 @@ Sections:
                 comparison over every registered arch  (writes BENCH_arch.json)
   search        predictor-guided autotuning search vs the fixed variant set
                 over all 9 benchmarks x every arch    (writes BENCH_search.json)
+  obs           telemetry overhead (enabled vs disabled) + span throughput
+                (writes BENCH_obs.json)
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 Some sections: ``... -m benchmarks.run --only fig6,fig7`` (comma-separated
 and/or repeated ``--only``); an unknown section name is an error.
+``--trace out.json`` records telemetry for the whole harness run and writes
+a Chrome trace (load in chrome://tracing or Perfetto); ``--trace out.jsonl``
+writes the JSONL event log instead.
 """
 
 import argparse
@@ -38,7 +43,7 @@ def main() -> None:
         metavar="SECTION[,SECTION...]",
         help="run only these sections (comma-separated, repeatable): "
              "table1|fig6|fig7|fig8|fig9|roofline|tpu_selector|binary|"
-             "pipeline|sim|arch|search",
+             "pipeline|sim|arch|search|obs",
     )
     ap.add_argument("--binary-json", default=None, metavar="PATH",
                     help="where the binary section writes its JSON report "
@@ -58,11 +63,18 @@ def main() -> None:
     ap.add_argument("--search-workers", type=int, default=0, metavar="N",
                     help="process-pool size for the search section "
                          "(default: in-process; results are identical)")
+    ap.add_argument("--obs-json", default=None, metavar="PATH",
+                    help="where the obs section writes its JSON report "
+                         "(default: BENCH_obs.json in the cwd)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record telemetry for the whole run and write a "
+                         "Chrome trace (.json) or JSONL event log (.jsonl)")
     args = ap.parse_args()
 
     from benchmarks import (
         arch_bench,
         binary_bench,
+        obs_bench,
         paper_figs,
         pipeline_bench,
         roofline,
@@ -89,6 +101,9 @@ def main() -> None:
             workers=args.search_workers,
         )
 
+    def obs_rows():
+        return obs_bench.obs_rows(args.obs_json or obs_bench.JSON_PATH)
+
     sections = {
         "table1": paper_figs.table1_occupancy,
         "fig6": paper_figs.fig6_speedups,
@@ -102,6 +117,7 @@ def main() -> None:
         "sim": sim_rows,
         "arch": arch_rows,
         "search": search_rows,
+        "obs": obs_rows,
     }
 
     selected = None
@@ -119,6 +135,11 @@ def main() -> None:
             # "--only ''" / "--only ," must not silently run zero sections
             ap.error(f"--only selected no sections (choose from: {', '.join(sections)})")
 
+    if args.trace:
+        from repro import obs
+
+        obs.enable()
+
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if selected is not None and name not in selected:
@@ -127,6 +148,11 @@ def main() -> None:
         for row in fn():
             print(row)
         print(f"section_{name}_wall,{(time.time()-t0)*1e6:.0f},elapsed", file=sys.stderr)
+
+    if args.trace:
+        fmt = obs.write_trace(args.trace)
+        spans = obs.get_telemetry().event_count()
+        print(f"trace: {spans} spans -> {args.trace} ({fmt})", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -26,11 +26,25 @@ the emitted container:
 
     PYTHONPATH=src python examples/translate_kernel.py --kernel cfd --tune
     PYTHONPATH=src python examples/translate_kernel.py --batch cfd,nn,cfd --tune --workers 4
+
+``--profile`` grades the chosen variant with stall attribution turned on and
+prints the profiled overlay — every instruction line gains an attributed
+stall-cycle column (cycles, share of total, dominant reason).  With
+``--tune`` the search itself runs profiled, so every confirmed variant's
+stall profile lands in the search report.  ``--trace out.json`` records
+telemetry spans for the whole walkthrough and writes a Chrome trace
+(chrome://tracing / Perfetto); ``--trace out.jsonl`` writes the JSONL event
+log instead:
+
+    PYTHONPATH=src python examples/translate_kernel.py --kernel cfd --profile
+    PYTHONPATH=src python examples/translate_kernel.py --kernel cfd --tune --trace trace.json
 """
 
 import argparse
 import json
+import sys
 
+from repro import obs
 from repro.binary import dumps, kernel_names, loads, loads_many, overlay, read_notes
 from repro.core import SearchConfig, TranslationService, occupancy_of, translate_binary
 from repro.core.isa import equivalent
@@ -69,15 +83,15 @@ def run_batch(names, tune=False, workers=0) -> None:
     print("OK")
 
 
-def run_tune(name, workers=0, overlay_out=False) -> None:
+def run_tune(name, workers=0, overlay_out=False, profile=False) -> None:
     """Autotune one kernel binary->binary and walk through the search report."""
     k = paper_kernel(name)
     occ = occupancy_of(k)
     print(f"kernel {k.name}: {k.reg_count} regs, occupancy {occ.occupancy:.3f} "
           f"(limited by {occ.limiter}); spill-target ladder {auto_targets(k)}")
     blob = dumps(k)
-    out, report = translate_binary(blob, tune=True,
-                                   search_config=SearchConfig(workers=workers))
+    cfg = SearchConfig(workers=workers, profile=profile)
+    out, report = translate_binary(blob, tune=True, search_config=cfg)
     sr = report.search
     print(f"searched {sr.space_size} configurations: explored {sr.explored} "
           f"demotions, beam {len(sr.beam)}, simulated {sr.simulated}")
@@ -90,7 +104,16 @@ def run_tune(name, workers=0, overlay_out=False) -> None:
     assert equivalent(k, chosen), "tuned kernel must preserve semantics"
     print(f"binary->binary: {len(blob)}B in, {len(out)}B out "
           f"(+{len(read_notes(out))} search-report note)")
-    if overlay_out:
+    if profile:
+        for label, prof in sorted(sr.stall_profiles.items()):
+            top = prof.hot(1)
+            hot = (f"hottest #{top[0].index} {top[0].op} "
+                   f"({prof.share(top[0]):.0%} {top[0].top_reason})"
+                   if top else "no attributed stalls")
+            print(f"  profile {label:28s} {prof.total:6d} stall cycles, {hot}")
+        if sr.chosen in sr.stall_profiles:
+            print(overlay(chosen, profile=sr.stall_profiles[sr.chosen]))
+    elif overlay_out:
         print(overlay(chosen))
     print("OK")
 
@@ -111,8 +134,28 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=0, metavar="N",
                     help="search process-pool size (default: in-process; "
                          "results are identical for any pool size)")
+    ap.add_argument("--profile", action="store_true",
+                    help="attribute stall cycles per instruction and print "
+                         "the profiled overlay (with --tune: profile every "
+                         "confirmed search variant)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record telemetry for the whole run and write a "
+                         "Chrome trace (.json) or JSONL event log (.jsonl)")
     args = ap.parse_args()
 
+    if args.trace:
+        obs.enable()
+    try:
+        _run(ap, args)
+    finally:
+        if args.trace:
+            fmt = obs.write_trace(args.trace)
+            spans = obs.get_telemetry().event_count()
+            print(f"trace: {spans} spans -> {args.trace} ({fmt})",
+                  file=sys.stderr)
+
+
+def _run(ap, args) -> None:
     if args.batch:
         names = [n.strip() for n in args.batch.split(",") if n.strip()]
         bad = [n for n in names if n not in PAPER_BENCHMARKS]
@@ -123,7 +166,8 @@ def main() -> None:
         return
 
     if args.tune:
-        run_tune(args.kernel, workers=args.workers, overlay_out=args.overlay)
+        run_tune(args.kernel, workers=args.workers, overlay_out=args.overlay,
+                 profile=args.profile)
         return
 
     k = paper_kernel(args.kernel)
@@ -146,7 +190,12 @@ def main() -> None:
         assert equivalent(k, chosen), "translation must preserve semantics"
         s = speedup(simulate(k), simulate(chosen))
         print(f"  simulated speedup over baseline: {s:.3f}x")
-    if args.overlay:
+    if args.profile:
+        prof = simulate(chosen, profile=True).stall_profile
+        print(f"stall attribution: {prof.total} cycles across "
+              f"{len(prof.instructions)} instructions")
+        print(overlay(chosen, profile=prof))
+    elif args.overlay:
         print(overlay(chosen))
     print("OK")
 

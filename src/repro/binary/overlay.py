@@ -43,11 +43,19 @@ def _strip_ctrl_comment(rendered: str) -> str:
     return rendered
 
 
-def overlay_lines(kernel: Union[Kernel, List[object]]) -> List[str]:
+def overlay_lines(
+    kernel: Union[Kernel, List[object]], profile=None
+) -> List[str]:
     """Annotated disassembly lines for a kernel (or raw item list).
 
     Addresses and packed control words follow the kernel's architecture
-    codec (raw item lists use the Maxwell layout)."""
+    codec (raw item lists use the Maxwell layout).
+
+    ``profile`` (a :class:`repro.obs.stallprof.StallProfile`, e.g. from
+    ``simulate(kernel, profile=True)``) appends a hot-instruction column —
+    attributed stall cycles, share of the kernel's total, dominant reason —
+    to every line the simulator blamed, turning the schedule view into a
+    profile view (``translate --profile``)."""
     items = kernel.items if isinstance(kernel, Kernel) else kernel
     codec = MAXWELL_CODEC
     lines: List[str] = []
@@ -62,6 +70,12 @@ def overlay_lines(kernel: Union[Kernel, List[object]]) -> List[str]:
             f"smem={kernel.shared_size}+{kernel.demoted_size}B "
             f"{arch_tag}ctrl=[stall Y | WR RD wait]"
         )
+        if profile is not None:
+            lines.append(
+                f"// stall profile: {profile.total} attributed stall cycles "
+                "(columns: cycles, share, dominant reason)"
+            )
+    by_index = profile.by_index() if profile is not None else {}
     body_width = max(
         (len(_strip_ctrl_comment(it.render())) for it in items if isinstance(it, Instr)),
         default=0,
@@ -72,14 +86,21 @@ def overlay_lines(kernel: Union[Kernel, List[object]]) -> List[str]:
             lines.append(it.render())
             continue
         body = _strip_ctrl_comment(it.render())
-        lines.append(
+        line = (
             f"/*{codec.instr_addr(idx):04x}*/ {body:<{body_width}s}  "
             f"{format_ctrl_columns(it.ctrl)} /*{codec.pack_ctrl(it.ctrl):06x}*/"
         )
+        entry = by_index.get(idx)
+        if entry is not None:
+            line += (
+                f"  |{entry.total:>9d} {profile.share(entry):6.1%}"
+                f" {entry.top_reason}"
+            )
+        lines.append(line)
         idx += 1
     return lines
 
 
-def overlay(kernel: Union[Kernel, List[object]]) -> str:
+def overlay(kernel: Union[Kernel, List[object]], profile=None) -> str:
     """Annotated disassembly as one string (see :func:`overlay_lines`)."""
-    return "\n".join(overlay_lines(kernel))
+    return "\n".join(overlay_lines(kernel, profile=profile))

@@ -59,6 +59,7 @@ from .passes import (
     PassVerificationError,
     aggressive_pipeline,
     demotion_pipeline,
+    stats_by_pass,
 )
 from .regdem import RegDemOptions, RegDemResult, auto_targets, demote
 from .search import (
@@ -98,6 +99,7 @@ __all__ = [
     "PassVerificationError",
     "aggressive_pipeline",
     "demotion_pipeline",
+    "stats_by_pass",
     "LocalSpace",
     "SharedSpace",
     "SpillSpace",

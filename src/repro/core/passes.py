@@ -33,6 +33,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
+from repro import obs
+
 from .candidates import make_candidates, operand_conflicts
 from .compaction import compact, packed_reg_count
 from .isa import (
@@ -141,6 +143,24 @@ class PassStat:
         return f"{self.name}: {self.seconds * 1e3:.2f}ms {body}".rstrip()
 
 
+def stats_by_pass(passes: Sequence[PassStat]) -> Dict[str, Dict[str, int]]:
+    """Executed-pass stats keyed by pass name, duplicates preserved.
+
+    A schedule may legitimately run the same pass more than once (e.g. a
+    tuning pipeline that re-runs ``fixup_stalls``); re-runs get ``#2``,
+    ``#3``, ... suffixes in execution order instead of silently overwriting
+    the first run's numbers.
+    """
+    out: Dict[str, Dict[str, int]] = {}
+    seen: Dict[str, int] = {}
+    for p in passes:
+        n = seen.get(p.name, 0) + 1
+        seen[p.name] = n
+        key = p.name if n == 1 else f"{p.name}#{n}"
+        out[key] = dict(p.stats)
+    return out
+
+
 class PassContext:
     """Everything the passes share for one spilling run over one kernel.
 
@@ -203,8 +223,10 @@ class PassContext:
         self._sem_verified: tuple = _sem_signature(self.kernel)
 
     def pass_stats(self) -> Dict[str, Dict[str, int]]:
-        """Per-pass stats keyed by pass name (last run wins on duplicates)."""
-        return {p.name: dict(p.stats) for p in self.passes}
+        """Per-pass stats keyed by pass name; a re-run pass gets a ``#n``
+        suffix (see :func:`stats_by_pass`) instead of clobbering the first
+        run's numbers."""
+        return stats_by_pass(self.passes)
 
 
 class Pass:
@@ -248,19 +270,34 @@ class PassPipeline:
         observer: Optional[Callable[[Pass, PassContext], None]] = None,
     ) -> PassContext:
         PIPELINE_COUNTERS["pipelines"] += 1
-        for p in self.passes:
-            t0 = time.perf_counter()
-            stats = p.run(ctx) or {}
-            ctx.passes.append(PassStat(p.name, time.perf_counter() - t0, stats))
-            PIPELINE_COUNTERS["passes"] += 1
-            if self.verify == "each":
-                self.check(ctx, p.name)
-            elif self.verify == "schedule":
-                self.check(ctx, p.name, semantics=False)
-            if observer is not None:
-                observer(p, ctx)
-        if self.verify == "final":
-            self.check(ctx, "final")
+        with obs.span(
+            "pipeline", kernel=ctx.kernel.name, passes=len(self.passes),
+            verify=self.verify,
+        ):
+            for p in self.passes:
+                with obs.span(f"pass:{p.name}"):
+                    t0 = time.perf_counter()
+                    stats = p.run(ctx) or {}
+                    dt = time.perf_counter() - t0
+                ctx.passes.append(PassStat(p.name, dt, stats))
+                PIPELINE_COUNTERS["passes"] += 1
+                if obs.enabled():
+                    reg = obs.metrics()
+                    reg.counter("pipeline.passes").inc()
+                    reg.histogram(f"pass.{p.name}.ms").observe(dt * 1e3)
+                    for k, v in stats.items():
+                        if isinstance(v, (int, float)) and v:
+                            reg.counter(f"pass.{p.name}.{k}").inc(v)
+                if self.verify == "each":
+                    self.check(ctx, p.name)
+                elif self.verify == "schedule":
+                    self.check(ctx, p.name, semantics=False)
+                if observer is not None:
+                    observer(p, ctx)
+            if self.verify == "final":
+                self.check(ctx, "final")
+            if obs.enabled():
+                obs.metrics().counter("pipeline.runs").inc()
         return ctx
 
     @staticmethod

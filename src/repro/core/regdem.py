@@ -40,6 +40,7 @@ from .passes import (  # noqa: F401  (re-exported: historical home of these name
     choose_rdv_bank,
     demote_register,
     demotion_pipeline,
+    stats_by_pass,
 )
 from .spillspace import SMEM_LIMIT, SharedSpace  # noqa: F401  (re-exported)
 
@@ -65,8 +66,9 @@ class RegDemResult:
         return self.demoted_words
 
     def pass_stats(self) -> dict:
-        """Per-pass stats keyed by pass name."""
-        return {p.name: dict(p.stats) for p in self.passes}
+        """Per-pass stats keyed by pass name (re-runs suffixed ``#n``, see
+        :func:`repro.core.passes.stats_by_pass`)."""
+        return stats_by_pass(self.passes)
 
 
 def demote(

@@ -47,10 +47,14 @@ pruning error).
 from __future__ import annotations
 
 import multiprocessing
+import os
 import random
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro import obs
+from repro.obs.stallprof import StallProfile
 
 from .candidates import STRATEGIES, spillable
 from .isa import Kernel
@@ -92,6 +96,10 @@ class SearchConfig:
     seed: int = 0
     #: pass-pipeline self-check policy for every variant built
     verify: str = "final"
+    #: attribute stall cycles per instruction/reason for every confirmed
+    #: variant (:attr:`SearchReport.stall_profiles`) — extra profiled
+    #: simulator runs, so off by default
+    profile: bool = False
 
     def signature(self) -> tuple:
         """Everything that determines the search *result* (cache key).
@@ -108,6 +116,7 @@ class SearchConfig:
             self.beam_width,
             self.top_k,
             self.verify,
+            self.profile,
         )
 
 
@@ -189,6 +198,10 @@ class SearchReport:
     speedup: float = 1.0
     #: best confirmed variant per architecture
     per_arch: Dict[str, str] = field(default_factory=dict)
+    #: label -> stall-attribution profile for every confirmed variant
+    #: (populated when :attr:`SearchConfig.profile` is set; deterministic,
+    #: so profiled reports stay byte-identical across repeat runs)
+    stall_profiles: Dict[str, StallProfile] = field(default_factory=dict)
     seconds: float = 0.0
 
     def to_json(self) -> dict:
@@ -206,6 +219,9 @@ class SearchReport:
             "speedup": round(self.speedup, 4),
             "per_arch": dict(sorted(self.per_arch.items())),
             "cycles": dict(sorted(self.cycles.items())),
+            "stall_profiles": {
+                lb: p.to_json() for lb, p in sorted(self.stall_profiles.items())
+            },
             "variants": [v.to_json() for v in self.variants],
         }
 
@@ -223,29 +239,59 @@ class SearchOutcome:
 # ---------------------------------------------------------------------------
 
 
+def _task_obs_begin(tel: tuple) -> tuple:
+    """Worker-side telemetry entry: honour the parent's on/off switch and
+    mark the event prefix a fork inherits, so only task-added spans export.
+
+    The per-task registry clear keeps metric accounting exact: the fork
+    snapshot (and any earlier task's already-exported observations in a
+    reused worker process) must never export twice."""
+    parent_pid, enabled = tel
+    t = obs.get_telemetry()
+    if enabled:
+        if os.getpid() != parent_pid:
+            t.registry.clear()
+        t.enabled = True
+    return parent_pid, t.event_count()
+
+
+def _task_obs_end(tel_state: tuple) -> tuple:
+    """Worker-side telemetry exit: ``(span_records, metrics_export)`` for
+    the parent's :meth:`Telemetry.adopt` / :meth:`MetricsRegistry.merge`.
+    Empty when the task ran in-process (spans already landed in the parent
+    timeline directly) or telemetry is off."""
+    parent_pid, mark = tel_state
+    t = obs.get_telemetry()
+    if os.getpid() == parent_pid or not t.enabled:
+        return (), {}
+    return tuple(t.export_events(mark)), t.registry.export()
+
+
 def _expand_one(payload: tuple) -> tuple:
     """Build + predictor-score one demotion variant.
 
     Pure function of the payload; runs identically in-process and in a pool
     worker.  Returns ``(index, kernel_blob, regs, demoted_words, occupancy,
-    raw_stalls, cache_export)``.
+    raw_stalls, cache_export, obs_export)``.
     """
-    (index, base_blob, target, strategy, flags, verify) = payload
+    (index, base_blob, target, strategy, flags, verify, tel) = payload
     from repro.binary import container
 
-    base = container.loads(base_blob)
-    bank, elim, resched, subst = flags
-    opts = RegDemOptions(
-        candidate_strategy=strategy,
-        bank_avoid=bank,
-        elim_redundant=elim,
-        reschedule=resched,
-        substitute=subst,
-    )
-    res = demote(base, target, opts, verify=verify)
-    cache = SimCache()
-    occ = achieved_occupancy(res.kernel)
-    stalls = cache.estimate_stalls(res.kernel, occ)
+    tel_state = _task_obs_begin(tel)
+    with obs.span("search.variant", index=index, target=target):
+        base = container.loads(base_blob)
+        bank, elim, resched, subst = flags
+        opts = RegDemOptions(
+            candidate_strategy=strategy,
+            bank_avoid=bank,
+            elim_redundant=elim,
+            reschedule=resched,
+            substitute=subst,
+        )
+        res = demote(base, target, opts, verify=verify)
+        cache = SimCache()
+        occ = achieved_occupancy(res.kernel)
+        stalls = cache.estimate_stalls(res.kernel, occ)
     return (
         index,
         container.dumps(res.kernel),
@@ -254,6 +300,7 @@ def _expand_one(payload: tuple) -> tuple:
         occ,
         stalls,
         cache.export(),
+        _task_obs_end(tel_state),
     )
 
 
@@ -266,15 +313,20 @@ def _seed_worker(seed: int) -> None:
 
 
 def _simulate_one(payload: tuple) -> tuple:
-    """Simulate one confirmed variant; returns ``(index, SimResult,
-    cache_export)``."""
-    (index, blob) = payload
+    """Simulate (and optionally stall-profile) one confirmed variant;
+    returns ``(index, SimResult, cache_export, obs_export)`` — the profile
+    rides home inside the cache export's ``profiles`` table."""
+    (index, blob, profile, tel) = payload
     from repro.binary import container
 
-    kernel = container.loads(blob)
-    cache = SimCache()
-    res = cache.simulate(kernel)
-    return index, res, cache.export()
+    tel_state = _task_obs_begin(tel)
+    with obs.span("search.confirm_sim", index=index):
+        kernel = container.loads(blob)
+        cache = SimCache()
+        if profile:
+            cache.profile(kernel)
+        res = cache.simulate(kernel)
+    return index, res, cache.export(), _task_obs_end(tel_state)
 
 
 def _pool_map(fn, payloads: Sequence[tuple], workers: int, seed: int = 0) -> list:
@@ -351,11 +403,34 @@ def search(
     variant set this way).  ``cache`` defaults to the process-wide
     :data:`~repro.core.simcache.DEFAULT_SIM_CACHE`.
     """
+    config = config or SearchConfig()
+    with obs.span("search", kernel=kernel.name, workers=config.workers):
+        return _search_impl(kernel, config, extra_variants, cache)
+
+
+def _adopt_obs(obs_export: tuple) -> None:
+    """Merge one pool task's telemetry into the parent timeline/registry
+    (called in submission order — histogram replay order is deterministic)."""
+    spans, metric_export = obs_export
+    if spans:
+        obs.get_telemetry().adopt(list(spans))
+    if metric_export:
+        obs.metrics().merge(metric_export)
+
+
+def _search_impl(
+    kernel: Kernel,
+    config: SearchConfig,
+    extra_variants: Optional[Dict[str, Kernel]],
+    cache: Optional[SimCache],
+) -> SearchOutcome:
     from repro.arch import arch_of, retarget
     from repro.binary import container
 
-    config = config or SearchConfig()
     cache = cache if cache is not None else DEFAULT_SIM_CACHE
+    #: rides in every pool payload: workers mirror the parent's telemetry
+    #: switch and ship their spans/metrics back on join
+    tel = (os.getpid(), obs.enabled())
     t0 = time.perf_counter()
 
     own = arch_of(kernel).name
@@ -410,13 +485,15 @@ def search(
 
     def run_stage(stage_specs, stage_name):
         payloads = [
-            (i, blobs[arch], tgt, strat, flags, config.verify)
+            (i, blobs[arch], tgt, strat, flags, config.verify, tel)
             for i, (arch, tgt, strat, flags) in enumerate(stage_specs)
         ]
-        results = _pool_map(_expand_one, payloads, config.workers, config.seed)
+        with obs.span(f"search.{stage_name}", variants=len(stage_specs)):
+            results = _pool_map(_expand_one, payloads, config.workers, config.seed)
         for (arch, tgt, strat, flags), res in zip(stage_specs, results):
-            (_, blob, regs, words, occ, stalls, export) = res
+            (_, blob, regs, words, occ, stalls, export, obs_export) = res
             cache.merge(export)
+            _adopt_obs(obs_export)
             opts_label = RegDemOptions(
                 candidate_strategy=strat,
                 bank_avoid=flags[0],
@@ -511,20 +588,29 @@ def search(
         {v.label for v in scored.values() if v.stage in ("baseline", "anchor")}
         | {v.label for v in top}
     )
-    pending: List[Tuple[int, bytes]] = []
+    pending: List[tuple] = []
     cycles: Dict[str, int] = {}
     for i, label in enumerate(confirm):
         hit = cache.peek_simulate(kernels[label])
-        if hit is not None:
+        if hit is not None and not config.profile:
             cycles[label] = hit.total_cycles
         else:
-            pending.append((i, container.dumps(kernels[label])))
-    sim_results = _pool_map(_simulate_one, pending, config.workers, config.seed)
-    for (i, _), (_, res, export) in zip(pending, sim_results):
+            pending.append((i, container.dumps(kernels[label]), config.profile, tel))
+    with obs.span("search.confirm", variants=len(confirm), pool=len(pending)):
+        sim_results = _pool_map(_simulate_one, pending, config.workers, config.seed)
+    for (i, _, _, _), (_, res, export, obs_export) in zip(pending, sim_results):
         cache.merge(export)
+        _adopt_obs(obs_export)
         cycles[confirm[i]] = res.total_cycles
     for label in confirm:
         scored[label].cycles = cycles[label]
+
+    # stall attribution for the confirmed set: served from the merged
+    # profiles table (the workers already ran the profiled engine)
+    stall_profiles: Dict[str, StallProfile] = {}
+    if config.profile:
+        for label in confirm:
+            stall_profiles[label] = cache.profile(kernels[label])
 
     # measured cost relative to the same arch's confirmed baseline — the
     # cross-arch-comparable ground truth mirroring ScoredVariant.rel
@@ -560,6 +646,7 @@ def search(
         cycles=cycles,
         speedup=1.0 / ratio(chosen) if ratio(chosen) else 1.0,
         per_arch=per_arch,
+        stall_profiles=stall_profiles,
         seconds=time.perf_counter() - t0,
     )
     winner = kernels[chosen]

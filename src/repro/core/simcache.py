@@ -27,6 +27,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Tuple
 
+from repro import obs
+from repro.obs import hit_rate as _hit_rate
+from repro.obs.stallprof import StallProfile
+
 from .isa import Kernel
 from .occupancy import SMConfig
 from .simulator import SimResult, simulate
@@ -63,31 +67,38 @@ class SimCache:
         self._sims: Dict[tuple, Tuple[str, SimResult]] = {}
         #: (crc, occupancy) -> (render, stalls)
         self._stalls: Dict[tuple, Tuple[str, float]] = {}
+        #: (crc, sm, max_cycles) -> (render, StallProfile)
+        self._profiles: Dict[tuple, Tuple[str, StallProfile]] = {}
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._sims) + len(self._stalls)
+        return len(self._sims) + len(self._stalls) + len(self._profiles)
 
     @property
     def hit_rate(self) -> float:
-        total = self.hits + self.misses
-        return self.hits / total if total else 0.0
+        return _hit_rate(self.hits, self.misses)
 
     def stats(self) -> Dict[str, float]:
         return {
             "hits": self.hits,
             "misses": self.misses,
+            "evictions": self.evictions,
+            "capacity": self.max_entries,
             "hit_rate": round(self.hit_rate, 3),
             "sim_entries": len(self._sims),
             "stall_entries": len(self._stalls),
+            "profile_entries": len(self._profiles),
         }
 
     def clear(self) -> None:
         self._sims.clear()
         self._stalls.clear()
+        self._profiles.clear()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     # -- keying ---------------------------------------------------------------
 
@@ -106,13 +117,20 @@ class SimCache:
         entry = table.get(key)
         if entry is not None and entry[0] == render:
             self.hits += 1
+            if obs.enabled():
+                obs.metrics().counter("simcache.hits").inc()
             return entry[1]
         self.misses += 1
+        if obs.enabled():
+            obs.metrics().counter("simcache.misses").inc()
         return None
 
     def _put(self, table: dict, key: tuple, render: str, value) -> None:
         if self.max_entries is not None and len(table) >= self.max_entries:
             table.pop(next(iter(table)))
+            self.evictions += 1
+            if obs.enabled():
+                obs.metrics().counter("simcache.evictions").inc()
         table[key] = (render, value)
 
     # -- cached operations ----------------------------------------------------
@@ -161,6 +179,37 @@ class SimCache:
             return dataclasses.replace(entry[1])
         return None
 
+    def profile(
+        self,
+        kernel: Kernel,
+        sm: Optional[SMConfig] = None,
+        max_cycles: int = 50_000_000,
+    ) -> StallProfile:
+        """Stall-attribution profile of ``kernel``, content-cached.
+
+        A miss runs the profiled engine once and warms *both* tables: the
+        :class:`~repro.obs.stallprof.StallProfile` here and the (identical
+        cycle counts, see ``simulate(profile=True)``) :class:`SimResult` in
+        the plain simulation table, so a profiled confirm stage leaves the
+        cache as warm as an unprofiled one."""
+        if sm is None:
+            from repro.arch import arch_of
+
+            sm = arch_of(kernel).sm
+        key = (self.content_key(kernel), sm, max_cycles)
+        render = _guard(kernel)
+        hit = self._get(self._profiles, key, render)
+        if hit is not None:
+            return hit
+        res = simulate(kernel, sm, max_cycles, profile=True)
+        prof = res.stall_profile
+        self._put(self._profiles, key, render, prof)
+        if key not in self._sims:
+            self._put(
+                self._sims, key, render, dataclasses.replace(res, stall_profile=None)
+            )
+        return prof
+
     def estimate_stalls(self, kernel: Kernel, occupancy: float) -> float:
         """:func:`repro.core.predictor.estimate_stalls`, content-cached.
 
@@ -188,7 +237,11 @@ class SimCache:
         measurements, and ships the entries back to the parent so the
         process-wide cache ends a parallel search exactly as warm as a
         serial one would leave it."""
-        return {"sims": dict(self._sims), "stalls": dict(self._stalls)}
+        return {
+            "sims": dict(self._sims),
+            "stalls": dict(self._stalls),
+            "profiles": dict(self._profiles),
+        }
 
     def merge(self, exported: Dict[str, dict]) -> int:
         """Adopt entries from an :meth:`export` payload; first writer wins
@@ -199,6 +252,7 @@ class SimCache:
         for table, incoming in (
             (self._sims, exported.get("sims", {})),
             (self._stalls, exported.get("stalls", {})),
+            (self._profiles, exported.get("profiles", {})),
         ):
             for key in sorted(incoming, key=repr):
                 if key not in table:

@@ -49,8 +49,11 @@ benchmark × variant.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
+
+from repro import obs
+from repro.obs.stallprof import R_BANK, R_BAR, R_MEM, R_STALL, R_UNIT, StallProfile
 
 from .isa import Instr, Kernel, Label, NUM_BARRIERS, OpClass
 from .occupancy import Occupancy, SMConfig, occupancy_of
@@ -150,6 +153,10 @@ class SimResult:
     occupancy: Occupancy
     dynamic_instructions: int
     issue_stalls: int  # cycles where no warp could issue
+    #: per-instruction, per-reason attribution of ``issue_stalls`` — filled
+    #: only by ``simulate(..., profile=True)``; its total balances exactly
+    #: against ``issue_stalls``
+    stall_profile: Optional[StallProfile] = None
 
 
 #: stable integer index per op class (trace-record encoding)
@@ -168,17 +175,28 @@ class CompiledTrace:
     one record however many times they expand.
     """
 
-    code: List[int]              # dynamic stream -> record index
-    klass: List[int]             # op-class index (into _KLASS_INTERVAL)
-    cost: List[int]              # issue cost: max(1, stall) + bank conflicts
-    waits: List[Tuple[int, ...]]  # scoreboard barriers gating issue
-    write_bar: List[int]         # barrier signalled at result latency (-1: none)
-    read_bar: List[int]          # barrier signalled at operand read (-1: none)
-    write_lat: List[int]         # producer signal latency
-    read_lat: List[int]          # operand-read signal latency
+    code: List[int] = field(default_factory=list)   # dynamic stream -> record index
+    klass: List[int] = field(default_factory=list)  # op-class index (into _KLASS_INTERVAL)
+    cost: List[int] = field(default_factory=list)   # issue cost: max(1, stall) + bank conflicts
+    waits: List[Tuple[int, ...]] = field(default_factory=list)  # scoreboard barriers gating issue
+    write_bar: List[int] = field(default_factory=list)  # barrier signalled at result latency (-1: none)
+    read_bar: List[int] = field(default_factory=list)   # barrier signalled at operand read (-1: none)
+    write_lat: List[int] = field(default_factory=list)  # producer signal latency
+    read_lat: List[int] = field(default_factory=list)   # operand-read signal latency
+    uid: List[int] = field(default_factory=list)        # static Instr.uid per record
+    conflicts: List[int] = field(default_factory=list)  # bank-conflict share of cost
+    is_mem: List[int] = field(default_factory=list)     # 1 = memory-class producer
 
     def __len__(self) -> int:
         return len(self.code)
+
+
+#: op-class indices whose barrier waits attribute as memory latency
+_MEM_KLASS = {
+    _KLASS_INDEX[OpClass.LSU_GLOBAL],
+    _KLASS_INDEX[OpClass.LSU_SHARED],
+    _KLASS_INDEX[OpClass.LSU_LOCAL],
+}
 
 
 def compile_trace(trace: List[Instr], arch=None) -> CompiledTrace:
@@ -186,7 +204,7 @@ def compile_trace(trace: List[Instr], arch=None) -> CompiledTrace:
 
     ``arch`` supplies the machine model (bank conflicts, signal latencies,
     operand-read release cap); ``None`` keeps the Maxwell table."""
-    ct = CompiledTrace([], [], [], [], [], [], [], [])
+    ct = CompiledTrace()
     rec_of: Dict[int, int] = {}
     read_cap = 20 if arch is None else arch.latency.read_release
     for ins in trace:
@@ -198,7 +216,8 @@ def compile_trace(trace: List[Instr], arch=None) -> CompiledTrace:
             conflicts = (
                 ins.reg_bank_conflicts() if arch is None else arch.bank_conflicts(ins)
             )
-            ct.klass.append(_KLASS_INDEX[ins.info.klass])
+            ki = _KLASS_INDEX[ins.info.klass]
+            ct.klass.append(ki)
             ct.cost.append(max(1, ctrl.stall) + conflicts)
             ct.waits.append(tuple(sorted(ctrl.wait)))
             ct.write_bar.append(-1 if ctrl.write_bar is None else ctrl.write_bar)
@@ -206,6 +225,9 @@ def compile_trace(trace: List[Instr], arch=None) -> CompiledTrace:
             lat = _signal_latency(ins, arch)
             ct.write_lat.append(lat)
             ct.read_lat.append(min(lat, read_cap))
+            ct.uid.append(ins.uid)
+            ct.conflicts.append(conflicts)
+            ct.is_mem.append(1 if ki in _MEM_KLASS else 0)
         ct.code.append(j)
     return ct
 
@@ -217,6 +239,7 @@ def _issue_loop(
     intervals: Optional[List[float]] = None,
     issue_width: int = ISSUE_WIDTH,
     num_barriers: int = NUM_BARRIERS,
+    blame: Optional[Dict[Tuple[int, str], int]] = None,
 ) -> Tuple[float, int]:
     """Stage 2: the event-driven issue loop; returns (cycles, idle_cycles).
 
@@ -226,6 +249,16 @@ def _issue_loop(
     event.  A warp's earliest issue time is cached — the scoreboard is
     per-warp state, so it can only change when that warp itself issues; a
     finished warp parks at ``inf``.
+
+    ``blame`` (optional) turns on stall attribution: every idle cycle the
+    loop counts is also charged to exactly one ``(record_index, reason)``
+    key in the dict — the scheduling decisions themselves are untouched, so
+    a profiled run is cycle-identical to an unprofiled one.  At issue time
+    each warp remembers *why* it will next be blocked (its own stall
+    count / bank conflicts, or a scoreboard barrier and that barrier's
+    setter); at idle time the warp whose event bounds the jump donates its
+    recorded reason, and ready-but-unit-blocked warps charge the busy
+    unit's instruction instead.
     """
     n_trace = len(ct.code)
     if n_trace == 0:
@@ -255,6 +288,14 @@ def _issue_loop(
     rr = 0
     inf = float("inf")
 
+    # stall-attribution state (profiled runs only): per-warp barrier setter
+    # records and the (record, reason) each blocked warp would charge
+    if blame is not None:
+        rec_conflicts = ct.conflicts
+        rec_mem = ct.is_mem
+        bar_setter = [[-1] * num_barriers for _ in range(n_warps)]
+        warp_blame: List[Tuple[int, str]] = [(code[0], R_STALL)] * n_warps
+
     while n_done < n_warps and cycle < max_cycles:
         issued = 0
         cap = cycle + 1
@@ -280,12 +321,19 @@ def _issue_loop(
                 if b >= 0:
                     # operands are read shortly after issue
                     bw[b] = cycle + p_rlat[p]
+                if blame is not None:
+                    j = code[p]
+                    bs = bar_setter[w]
+                    if p_wbar[p] >= 0:
+                        bs[p_wbar[p]] = j
+                    if p_rbar[p] >= 0:
+                        bs[p_rbar[p]] = j
                 p += 1
                 pc[w] = p
                 if p >= n_trace:
                     n_done += 1
                     next_time[w] = inf
-                else:
+                elif blame is None:
                     ws = p_next_waits[p - 1]
                     if ws:
                         for b in ws:
@@ -293,6 +341,24 @@ def _issue_loop(
                             if v > t:
                                 t = v
                     next_time[w] = t
+                else:
+                    # same wait maximization, additionally tracking which
+                    # event bounds t: the issued instruction's own cost
+                    # (stall / bank conflict) or a barrier and its setter
+                    j = code[p - 1]
+                    rec = j
+                    reason = R_BANK if rec_conflicts[j] else R_STALL
+                    bs = bar_setter[w]
+                    for b in p_next_waits[p - 1]:
+                        v = bw[b]
+                        if v > t:
+                            t = v
+                            sj = bs[b]
+                            if sj >= 0:
+                                rec = sj
+                                reason = R_MEM if rec_mem[sj] else R_BAR
+                    next_time[w] = t
+                    warp_blame[w] = (rec, reason)
                 if issued >= issue_width:
                     break
             if issued >= issue_width:
@@ -318,14 +384,17 @@ def _issue_loop(
             #   one iteration with rr += k and idle += k.
             mn_wait = inf   # earliest blocked-warp ready time
             mn_block = inf  # earliest unit-free event of a ready warp
+            w_wait = w_block = 0  # warps owning those bounds (attribution)
             for w in range(n_warps):
                 v = next_time[w]
                 if v <= cycle:
                     v = float(int(unit_free[p_klass[pc[w]]]))
                     if v < mn_block:
                         mn_block = v
+                        w_block = w
                 elif v < mn_wait:
                     mn_wait = v
+                    w_wait = w
             if mn_block < inf:
                 nxt = mn_block if mn_block < mn_wait else mn_wait
                 if nxt < cap:
@@ -338,9 +407,19 @@ def _issue_loop(
                 idle_cycles += k
                 rr += k - 1
                 rr %= n_warps
+                if blame is not None and k:
+                    if mn_block <= mn_wait:
+                        key = (code[pc[w_block]], R_UNIT)
+                    else:
+                        key = warp_blame[w_wait]
+                    blame[key] = blame.get(key, 0) + k
             else:
                 nxt = mn_wait if mn_wait > cap else cap
-                idle_cycles += int(nxt - cycle)
+                k = int(nxt - cycle)
+                idle_cycles += k
+                if blame is not None and k:
+                    key = warp_blame[w_wait]
+                    blame[key] = blame.get(key, 0) + k
             cycle = nxt
     return cycle, idle_cycles
 
@@ -349,6 +428,7 @@ def simulate(
     kernel: Kernel,
     sm: Optional[SMConfig] = None,
     max_cycles: int = 50_000_000,
+    profile: bool = False,
 ) -> SimResult:
     """Simulate one wave of resident warps on one SM; scale by wave count.
 
@@ -360,32 +440,54 @@ def simulate(
     kernel's architecture; ``sm`` overrides the occupancy limits only
     (default: the arch's own SMConfig), which permits deliberate
     cross-arch what-ifs like ``simulate(volta_kernel, MAXWELL)``.
-    """
-    arch = _arch_of(kernel)
-    if sm is None:
-        sm = arch.sm
-    occ = occupancy_of(kernel, sm)
-    trace = flatten_trace(kernel)
-    n_warps = max(occ.resident_warps, 1)
-    ct = compile_trace(trace, arch)
-    intervals = [arch.issue_interval(k) for k in OpClass]
-    cycle, idle_cycles = _issue_loop(
-        ct, n_warps, max_cycles, intervals, arch.issue_width, arch.num_barriers
-    )
 
-    # fractional waves: charge the launch by work/throughput, not by rounding
-    # partial waves up (a 1.2-wave launch is not 2x a 1.0-wave launch)
-    blocks_per_wave = max(occ.resident_blocks, 1) * sm.num_sms
-    waves = kernel.num_blocks / blocks_per_wave
-    return SimResult(
-        kernel_name=kernel.name,
-        cycles_per_wave=int(cycle),
-        waves=max(1.0, waves),
-        total_cycles=int(cycle * max(1.0, waves)),
-        occupancy=occ,
-        dynamic_instructions=len(trace),
-        issue_stalls=idle_cycles,
-    )
+    ``profile=True`` additionally attributes every idle cycle to a static
+    instruction and a reason (:class:`repro.obs.stallprof.StallProfile` on
+    ``SimResult.stall_profile``); the attribution is bookkeeping only —
+    cycle counts are identical either way, and the profile total balances
+    exactly against ``issue_stalls``.
+    """
+    with obs.span("simulate", kernel=kernel.name, profile=profile) as sp:
+        arch = _arch_of(kernel)
+        if sm is None:
+            sm = arch.sm
+        occ = occupancy_of(kernel, sm)
+        trace = flatten_trace(kernel)
+        n_warps = max(occ.resident_warps, 1)
+        ct = compile_trace(trace, arch)
+        intervals = [arch.issue_interval(k) for k in OpClass]
+        blame: Optional[Dict[Tuple[int, str], int]] = {} if profile else None
+        cycle, idle_cycles = _issue_loop(
+            ct, n_warps, max_cycles, intervals, arch.issue_width,
+            arch.num_barriers, blame,
+        )
+
+        stall_profile = None
+        if profile:
+            from repro.obs.stallprof import build_profile
+
+            by_uid: Dict[Tuple[int, str], int] = {}
+            for (rec, reason), c in blame.items():
+                key = (ct.uid[rec], reason)
+                by_uid[key] = by_uid.get(key, 0) + c
+            stall_profile = build_profile(kernel, by_uid, idle_cycles)
+
+        # fractional waves: charge the launch by work/throughput, not by
+        # rounding partial waves up (a 1.2-wave launch is not 2x a 1.0-wave
+        # launch)
+        blocks_per_wave = max(occ.resident_blocks, 1) * sm.num_sms
+        waves = kernel.num_blocks / blocks_per_wave
+        sp.set(cycles=int(cycle), warps=n_warps, instrs=len(trace))
+        return SimResult(
+            kernel_name=kernel.name,
+            cycles_per_wave=int(cycle),
+            waves=max(1.0, waves),
+            total_cycles=int(cycle * max(1.0, waves)),
+            occupancy=occ,
+            dynamic_instructions=len(trace),
+            issue_stalls=idle_cycles,
+            stall_profile=stall_profile,
+        )
 
 
 def simulate_reference(

@@ -38,8 +38,13 @@ run.
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple, Union
+
+from repro import obs
+from repro.obs import Histogram
+from repro.obs import hit_rate as _hit_rate
 
 from .candidates import STRATEGIES
 from .isa import Kernel, equivalent, parse_kernel
@@ -225,14 +230,24 @@ class TranslationCache:
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
 
     @property
     def hit_rate(self) -> float:
-        total = self.hits + self.misses
-        return self.hits / total if total else 0.0
+        return _hit_rate(self.hits, self.misses)
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "capacity": self.max_entries,
+            "entries": len(self._entries),
+            "hit_rate": round(self.hit_rate, 3),
+        }
 
     @staticmethod
     def content_crc(kernel: Kernel) -> int:
@@ -269,14 +284,21 @@ class TranslationCache:
             input_render, chosen, report = entry
             if input_render == kernel.render():
                 self.hits += 1
+                if obs.enabled():
+                    obs.metrics().counter("translation_cache.hits").inc()
                 return chosen.copy(), report
         self.misses += 1
+        if obs.enabled():
+            obs.metrics().counter("translation_cache.misses").inc()
         return None
 
     def put(self, key: tuple, kernel: Kernel, chosen: Kernel, report: TranslationReport) -> None:
         if self.max_entries is not None and len(self._entries) >= self.max_entries:
             # drop the oldest entry (insertion order) — simple FIFO bound
             self._entries.pop(next(iter(self._entries)))
+            self.evictions += 1
+            if obs.enabled():
+                obs.metrics().counter("translation_cache.evictions").inc()
         self._entries[key] = (kernel.render(), chosen.copy(), report)
 
 
@@ -299,8 +321,7 @@ class BatchTranslationReport:
 
     @property
     def hit_rate(self) -> float:
-        total = self.cache_hits + self.cache_misses
-        return self.cache_hits / total if total else 0.0
+        return _hit_rate(self.cache_hits, self.cache_misses)
 
 
 class TranslationService:
@@ -327,43 +348,81 @@ class TranslationService:
         #: pass-pipeline self-check policy ("final" on the serving hot path;
         #: byte-identical output to "each" — regression-tested)
         self.verify = verify
+        # service-level metrics stay always-on (one histogram append per
+        # call — nothing per instruction); they are the payload of the
+        # planned daemon /metrics endpoint (ROADMAP open item 1)
+        self._translate_ms = Histogram()
+        self._kernels_done = 0
+        self._busy_seconds = 0.0
+
+    def _record_call(self, n_kernels: int, seconds: float) -> None:
+        self._translate_ms.observe(seconds * 1e3)
+        self._kernels_done += n_kernels
+        self._busy_seconds += seconds
+        if obs.enabled():
+            reg = obs.metrics()
+            reg.counter("service.kernels").inc(n_kernels)
+            reg.histogram("service.translate_ms").observe(seconds * 1e3)
+
+    @property
+    def kernels_per_second(self) -> float:
+        """Lifetime service throughput: kernels translated per busy second
+        (wall time inside translate/tune calls, idle time excluded)."""
+        return self._kernels_done / self._busy_seconds if self._busy_seconds else 0.0
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """The service's health as one plain dict: call latency distribution
+        (p50/p99), throughput, and translation-cache telemetry — the shape
+        the future translation daemon will serve from its metrics endpoint."""
+        return {
+            "calls": self._translate_ms.count,
+            "kernels": self._kernels_done,
+            "kernels_per_s": round(self.kernels_per_second, 3),
+            "translate_ms": self._translate_ms.snapshot(),
+            "cache": self.cache.stats(),
+        }
 
     def translate(self, data: bytes) -> Tuple[bytes, BatchTranslationReport]:
         """Container bytes in, container bytes out, every kernel translated."""
         from repro.binary import container
         from repro.binary.roundtrip import RoundTripError, verified_dumps_many
 
+        t_call = time.perf_counter()
         kernels = container.loads_many(data)
         hits0, misses0 = self.cache.hits, self.cache.misses
         chosen_list: List[Kernel] = []
         reports: List[TranslationReport] = []
         cached_flags: List[bool] = []
-        for kernel in kernels:
-            key = self.cache.key(
-                kernel, self.target_regs, self.options, self.use_predictor
-            )
-            entry = self.cache.get(key, kernel)
-            if entry is not None:
-                chosen, report = entry
-                cached_flags.append(True)
-            else:
-                report = translate(
-                    kernel,
-                    target_regs=self.target_regs,
-                    options=self.options,
-                    use_predictor=self.use_predictor,
-                    verify=self.verify,
-                )
-                chosen = kernel if report.chosen == "nvcc" else report.chosen_kernel
-                self.cache.put(key, kernel, chosen, report)
-                cached_flags.append(False)
-            chosen_list.append(chosen)
-            reports.append(report)
+        with obs.span("service.translate", kernels=len(kernels)):
+            for kernel in kernels:
+                with obs.span("translate", kernel=kernel.name) as sp:
+                    key = self.cache.key(
+                        kernel, self.target_regs, self.options, self.use_predictor
+                    )
+                    entry = self.cache.get(key, kernel)
+                    if entry is not None:
+                        chosen, report = entry
+                        cached_flags.append(True)
+                    else:
+                        report = translate(
+                            kernel,
+                            target_regs=self.target_regs,
+                            options=self.options,
+                            use_predictor=self.use_predictor,
+                            verify=self.verify,
+                        )
+                        chosen = kernel if report.chosen == "nvcc" else report.chosen_kernel
+                        self.cache.put(key, kernel, chosen, report)
+                        cached_flags.append(False)
+                    sp.set(cached=cached_flags[-1], chosen=report.chosen)
+                chosen_list.append(chosen)
+                reports.append(report)
 
-        try:
-            out = verified_dumps_many(chosen_list)
-        except RoundTripError as exc:
-            raise TranslationError(str(exc)) from exc
+            try:
+                out = verified_dumps_many(chosen_list)
+            except RoundTripError as exc:
+                raise TranslationError(str(exc)) from exc
+        self._record_call(len(kernels), time.perf_counter() - t_call)
         return out, BatchTranslationReport(
             reports=reports,
             cached=cached_flags,
@@ -392,45 +451,50 @@ class TranslationService:
         from repro.binary.roundtrip import RoundTripError, verified_dumps_many
 
         config = config or SearchConfig()
+        t_call = time.perf_counter()
         kernels = container.loads_many(data)
         hits0, misses0 = self.cache.hits, self.cache.misses
         chosen_list: List[Kernel] = []
         reports: List[TranslationReport] = []
         cached_flags: List[bool] = []
         notes: Dict[str, bytes] = {}
-        for i, kernel in enumerate(kernels):
-            key = self.cache.tune_key(kernel, config)
-            entry = self.cache.get(key, kernel)
-            if entry is not None:
-                chosen, report = entry
-                cached_flags.append(True)
-            else:
-                outcome = search(kernel, config)
-                report = TranslationReport(
-                    kernel_name=kernel.name,
-                    baseline_regs=kernel.reg_count,
-                    chosen=outcome.report.chosen,
-                    considered=sorted(v.label for v in outcome.report.variants),
-                    predictions={
-                        v.label: v.rel for v in outcome.report.variants
-                    },
-                    search=outcome.report,
-                )
-                chosen = outcome.kernel
-                self.cache.put(key, kernel, chosen, report)
-                cached_flags.append(False)
-            chosen_list.append(chosen)
-            reports.append(report)
-            # SearchReport.to_json is deterministic (no wall times), so a
-            # cache-hit re-tune emits byte-identical notes
-            notes[f"search.{i}.{kernel.name}"] = json.dumps(
-                report.search.to_json(), sort_keys=True
-            ).encode("utf-8")
+        with obs.span("service.tune", kernels=len(kernels)):
+            for i, kernel in enumerate(kernels):
+                with obs.span("tune", kernel=kernel.name) as sp:
+                    key = self.cache.tune_key(kernel, config)
+                    entry = self.cache.get(key, kernel)
+                    if entry is not None:
+                        chosen, report = entry
+                        cached_flags.append(True)
+                    else:
+                        outcome = search(kernel, config)
+                        report = TranslationReport(
+                            kernel_name=kernel.name,
+                            baseline_regs=kernel.reg_count,
+                            chosen=outcome.report.chosen,
+                            considered=sorted(v.label for v in outcome.report.variants),
+                            predictions={
+                                v.label: v.rel for v in outcome.report.variants
+                            },
+                            search=outcome.report,
+                        )
+                        chosen = outcome.kernel
+                        self.cache.put(key, kernel, chosen, report)
+                        cached_flags.append(False)
+                    sp.set(cached=cached_flags[-1], chosen=report.chosen)
+                chosen_list.append(chosen)
+                reports.append(report)
+                # SearchReport.to_json is deterministic (no wall times), so a
+                # cache-hit re-tune emits byte-identical notes
+                notes[f"search.{i}.{kernel.name}"] = json.dumps(
+                    report.search.to_json(), sort_keys=True
+                ).encode("utf-8")
 
-        try:
-            out = verified_dumps_many(chosen_list, notes=notes)
-        except RoundTripError as exc:
-            raise TranslationError(str(exc)) from exc
+            try:
+                out = verified_dumps_many(chosen_list, notes=notes)
+            except RoundTripError as exc:
+                raise TranslationError(str(exc)) from exc
+        self._record_call(len(kernels), time.perf_counter() - t_call)
         return out, BatchTranslationReport(
             reports=reports,
             cached=cached_flags,

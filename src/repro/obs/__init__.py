@@ -1,0 +1,75 @@
+"""repro.obs — the unified telemetry layer.
+
+One process-wide subsystem, near-zero overhead when disabled, shared by
+translate / simulate / search / serve:
+
+* :mod:`repro.obs.telemetry`  hierarchical spans (name, wall time, attrs,
+                              parent), pool-worker export/merge;
+* :mod:`repro.obs.metrics`    counters / gauges / histograms (p50/p99) in a
+                              snapshot-able registry — the payload of the
+                              planned translation-daemon metrics endpoint;
+* :mod:`repro.obs.stallprof`  per-instruction, per-reason stall attribution
+                              from the event-driven simulator (books balance
+                              exactly against ``SimResult.issue_stalls``);
+* :mod:`repro.obs.export`     JSONL event log + Chrome trace-format
+                              (``chrome://tracing`` / Perfetto) exporters.
+
+Typical use::
+
+    from repro import obs
+
+    obs.enable()
+    ... run translations / searches ...
+    obs.write_trace("trace.json")          # load in Perfetto
+    print(obs.metrics().snapshot())
+
+Instrumentation sites call ``obs.span(...)`` unconditionally: with
+telemetry disabled that is one attribute check returning a shared no-op,
+which is what keeps the disabled-mode tax unmeasurable (see
+``BENCH_obs.json``).
+"""
+
+from .export import chrome_trace, to_jsonl, write_trace
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry, hit_rate
+from .stallprof import REASONS, InstrStall, StallProfile, build_profile
+from .telemetry import (
+    DEFAULT_TELEMETRY,
+    NULL_SPAN,
+    Span,
+    SpanRecord,
+    Telemetry,
+    disable,
+    enable,
+    enabled,
+    get_telemetry,
+    metrics,
+    reset,
+    span,
+)
+
+__all__ = [
+    "chrome_trace",
+    "to_jsonl",
+    "write_trace",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "hit_rate",
+    "REASONS",
+    "InstrStall",
+    "StallProfile",
+    "build_profile",
+    "DEFAULT_TELEMETRY",
+    "NULL_SPAN",
+    "Span",
+    "SpanRecord",
+    "Telemetry",
+    "disable",
+    "enable",
+    "enabled",
+    "get_telemetry",
+    "metrics",
+    "reset",
+    "span",
+]

@@ -22,7 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import Model, ModelConfig
+from repro.obs import Histogram
 
 Pytree = Any
 
@@ -60,6 +62,23 @@ class Server:
         self.params = params
         self._decode = jax.jit(self._decode_step)
         self._prefill = jax.jit(self._prefill_fn)
+        # serve-level metrics: always on (one histogram append per finished
+        # sequence), same shape as TranslationService.metrics_snapshot
+        self._latency_ms = Histogram()
+        self._tokens_done = 0
+        self._busy_seconds = 0.0
+
+    def metrics_snapshot(self) -> dict:
+        """Serving health as one plain dict: completion latency distribution
+        (p50/p99) and lifetime decode throughput."""
+        return {
+            "completions": self._latency_ms.count,
+            "tokens": self._tokens_done,
+            "tokens_per_s": round(
+                self._tokens_done / self._busy_seconds, 3
+            ) if self._busy_seconds else 0.0,
+            "latency_ms": self._latency_ms.snapshot(),
+        }
 
     # -- jitted steps -----------------------------------------------------------
 
@@ -84,6 +103,22 @@ class Server:
     # -- the serving loop ----------------------------------------------------------
 
     def serve(self, requests: List[Request]) -> List[Completion]:
+        t_call = time.perf_counter()
+        with obs.span("serve", requests=len(requests)) as sp:
+            done = self._serve(requests)
+            sp.set(completions=len(done))
+        seconds = time.perf_counter() - t_call
+        self._busy_seconds += seconds
+        for c in done:
+            self._latency_ms.observe(c.latency_s * 1e3)
+            self._tokens_done += len(c.tokens)
+        if obs.enabled():
+            reg = obs.metrics()
+            reg.counter("serve.completions").inc(len(done))
+            reg.histogram("serve.batch_s").observe(seconds)
+        return done
+
+    def _serve(self, requests: List[Request]) -> List[Completion]:
         cfg = self.cfg
         rng = np.random.default_rng(cfg.seed)
         pending = queue.SimpleQueue()

@@ -221,6 +221,33 @@ def test_pipeline_counters_advance():
     assert after["passes"] >= before["passes"] + 5
 
 
+class _TaggedPass(Pass):
+    """Records which run it is so duplicate-name stats are tellable apart."""
+
+    name = "tagged"
+
+    def __init__(self, tag):
+        self.tag = tag
+
+    def run(self, ctx):
+        return {"tag": self.tag}
+
+
+def test_pass_stats_keeps_duplicate_pass_runs():
+    """Satellite fix: a pipeline that runs the same pass twice reports both
+    runs' stats (``name``, ``name#2``, ...) instead of silently collapsing
+    them into whichever ran last."""
+    k = paper_kernel("md5hash")
+    ctx = PassContext(k, SharedSpace(), target=32)
+    PassPipeline(
+        [_TaggedPass(1), _TaggedPass(2), _TaggedPass(3)], verify="none"
+    ).run(ctx)
+    assert [p.name for p in ctx.passes] == ["tagged", "tagged", "tagged"]
+    stats = ctx.pass_stats()
+    assert list(stats) == ["tagged", "tagged#2", "tagged#3"]
+    assert [s["tag"] for s in stats.values()] == [1, 2, 3]
+
+
 def test_context_reserves_above_reg_count():
     k = paper_kernel("conv")
     ctx = PassContext(k, SharedSpace(), target=32)

@@ -117,3 +117,37 @@ def test_cache_bound_evicts_fifo():
     assert len(cache) == 1
     translate_binary(dumps(a), options=OPTS, cache=cache)
     assert cache.hits == 0 and cache.misses == 3
+    stats = cache.stats()
+    assert stats["evictions"] == 2
+    assert stats["capacity"] == 1
+    assert stats["entries"] == 1
+    assert stats["hit_rate"] == 0.0
+
+
+def test_cache_stats_and_shared_hit_rate():
+    cache = TranslationCache()
+    a = paper_kernel("md5hash")
+    translate_binary(dumps(a), options=OPTS, cache=cache)
+    translate_binary(dumps(a), options=OPTS, cache=cache)
+    stats = cache.stats()
+    assert (stats["hits"], stats["misses"], stats["evictions"]) == (1, 1, 0)
+    assert stats["hit_rate"] == 0.5 == cache.hit_rate
+
+
+def test_service_metrics_snapshot():
+    service = TranslationService(options=OPTS)
+    a = paper_kernel("md5hash")
+    service.translate(dumps([a, a.copy()]))
+    service.translate(dumps(a))
+    snap = service.metrics_snapshot()
+    assert snap["calls"] == 2
+    assert snap["kernels"] == 3
+    assert snap["kernels_per_s"] > 0
+    lat = snap["translate_ms"]
+    assert lat["count"] == 2
+    assert 0 < lat["p50"] <= lat["p99"]
+    assert lat["p99"] == pytest.approx(lat["max"], rel=1e-4)
+    # one cold miss, then two in-batch + one cross-call hit
+    assert snap["cache"]["hits"] == 2
+    assert snap["cache"]["misses"] == 1
+    assert snap["cache"]["hit_rate"] == pytest.approx(2 / 3, abs=1e-3)
