@@ -20,7 +20,7 @@ from typing import Iterator, Optional
 
 from repro.core.kernelgen import PAPER_BENCHMARKS
 from repro.core.simcache import SimCache
-from repro.core.simulator import simulate
+from repro.core.simulator import CheckpointStore, simulate, simulate_batch
 from repro.core.variants import make_variants
 
 from ._util import write_json_atomic
@@ -57,6 +57,29 @@ def sim_rows(json_path: Optional[str] = JSON_PATH) -> Iterator[str]:
     engine_s = time.perf_counter() - t0
     kernels_per_s = n / engine_s
 
+    # batched entry point: the same workload through one simulate_batch
+    # sweep (fresh checkpoint store, no result cache — pure engine path)
+    t0 = time.perf_counter()
+    batched = simulate_batch(kernels, checkpoints=CheckpointStore())
+    batch_s = time.perf_counter() - t0
+    batch_kernels_per_s = n / batch_s
+    assert all(
+        b.dynamic_instructions == 0 or b.total_cycles > 0 for b in batched
+    )
+
+    # incremental re-simulation: re-running a workload whose checkpoints are
+    # already captured resumes each kernel at the deepest milestone; the
+    # reuse rate is the position-weighted fraction of trace skipped
+    store = CheckpointStore()
+    simulate_batch(kernels, checkpoints=store)  # cold: captures milestones
+    t0 = time.perf_counter()
+    resumed = simulate_batch(kernels, checkpoints=store)
+    incr_s = time.perf_counter() - t0
+    incremental_reuse_rate = store.reuse_rate
+    assert all(
+        r.total_cycles == b.total_cycles for r, b in zip(resumed, batched)
+    ), "checkpoint resume diverged from cold simulation"
+
     # cache behaviour: a cold pass populates, a warm pass must fully hit
     cache = SimCache()
     cold = [cache.simulate(k) for k in kernels]
@@ -77,6 +100,9 @@ def sim_rows(json_path: Optional[str] = JSON_PATH) -> Iterator[str]:
             "kernels_per_s": round(kernels_per_s, 2),
             "baseline_kernels_per_s": BASELINE_KERNELS_PER_S,
             "speedup_vs_baseline": round(kernels_per_s / BASELINE_KERNELS_PER_S, 2),
+            "batch_kernels_per_s": round(batch_kernels_per_s, 2),
+            "incremental_kernels_per_s": round(n / incr_s, 2),
+            "incremental_reuse_rate": round(incremental_reuse_rate, 3),
         },
         "cache": {
             "hits": cache.hits,
@@ -93,6 +119,12 @@ def sim_rows(json_path: Optional[str] = JSON_PATH) -> Iterator[str]:
         f"sim_engine,{engine_s * 1e6 / n:.1f},"
         f"kernels_per_s={e['kernels_per_s']};"
         f"speedup_vs_baseline={e['speedup_vs_baseline']}x"
+    )
+    yield (
+        f"sim_batch,{batch_s * 1e6 / n:.1f},"
+        f"batch_kernels_per_s={e['batch_kernels_per_s']};"
+        f"incremental_kernels_per_s={e['incremental_kernels_per_s']};"
+        f"incremental_reuse_rate={e['incremental_reuse_rate']}"
     )
     yield (
         f"sim_cache_warm,{c['warm_us_per_kernel']},"

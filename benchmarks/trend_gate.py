@@ -40,6 +40,8 @@ METRICS: List[Tuple[str, Tuple[str, ...], str]] = [
     ("BENCH_pipeline.json", ("batch", "warm_kernels_per_s"), "higher"),
     ("BENCH_pipeline.json", ("cache", "warm_hit_rate"), "higher"),
     ("BENCH_sim.json", ("engine", "kernels_per_s"), "higher"),
+    ("BENCH_sim.json", ("engine", "batch_kernels_per_s"), "higher"),
+    ("BENCH_sim.json", ("engine", "incremental_reuse_rate"), "higher"),
     ("BENCH_sim.json", ("cache", "warm_hit_rate"), "higher"),
     ("BENCH_search.json", ("summary", "variants_per_s"), "higher"),
     ("BENCH_search.json", ("summary", "mean_agreement"), "higher"),

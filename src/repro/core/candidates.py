@@ -24,23 +24,19 @@ LOOP_FACTOR = 10
 
 
 def width_map(kernel: Kernel) -> Dict[int, int]:
-    """reg -> operand width (2 for 64-bit pairs), by leading register."""
+    """reg -> operand width (2 for 64-bit pairs), by leading register.
+
+    Merges the per-instruction ``width_entries`` (cached on the instruction
+    alongside its operand words: address operands of memory ops contribute
+    width 1, everything else its opcode width) with ``max`` — the demotion
+    pipeline recomputes this map after every mutation, so only instructions
+    actually touched by a rename pay the re-parse."""
     widths: Dict[int, int] = {}
+    get = widths.get
     for ins in kernel.instructions():
-        w = ins.info.width
-        regs = list(ins.dsts)
-        # address operands stay 32-bit even for wide memory ops
-        if ins.info.is_memory:
-            regs += ins.srcs[1:]
-        else:
-            regs += ins.srcs
-        for r in regs:
-            if r != RZ:
-                widths[r] = max(widths.get(r, 1), w)
-        if ins.info.is_memory and ins.srcs:
-            r = ins.srcs[0]
-            if r != RZ:
-                widths.setdefault(r, 1)
+        for r, w in ins.width_entries():
+            if w > get(r, 0):
+                widths[r] = w
     return widths
 
 

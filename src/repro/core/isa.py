@@ -25,12 +25,11 @@ semantics (the correctness oracle for :mod:`repro.core.regdem`).
 
 from __future__ import annotations
 
-import dataclasses
 import enum
 import math
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
 
 # ---------------------------------------------------------------------------
 # Registers
@@ -338,7 +337,19 @@ class Instr:
         for r in set(sw):
             banks.setdefault(reg_bank(r), set()).add(r)
         conflicts = sum(len(v) - 1 for v in banks.values())
-        cache = (info, tuple(dw), tuple(sw), conflicts)
+        # width-map contributions: leading reg -> operand width, with the
+        # address operand of memory ops pinned to width 1 (it stays 32-bit
+        # even for wide loads/stores)
+        went: List[Tuple[int, int]] = []
+        for r in self.dsts:
+            if r != RZ:
+                went.append((r, w))
+        for i, r in enumerate(self.srcs):
+            if r != RZ:
+                went.append((r, 1 if (is_memory and i == 0) else w))
+        lead = frozenset(r for r in self.dsts + self.srcs if r != RZ)
+        allw = frozenset(dw + sw)
+        cache = (info, tuple(dw), tuple(sw), conflicts, tuple(went), lead, allw)
         object.__setattr__(self, "_opc", cache)
         return cache
 
@@ -364,11 +375,18 @@ class Instr:
         c = self._opc
         return (c or self._operand_cache())[2]
 
-    def regs(self) -> Set[int]:
-        return set(self.dst_words()) | set(self.src_words())
+    def regs(self) -> FrozenSet[int]:
+        c = self._opc
+        return (c or self._operand_cache())[6]
 
-    def leading_regs(self) -> Set[int]:
-        return {r for r in (self.dsts + self.srcs) if r != RZ}
+    def width_entries(self) -> Tuple[Tuple[int, int], ...]:
+        """(reg, width) width-map contributions of this instruction."""
+        c = self._opc
+        return (c or self._operand_cache())[4]
+
+    def leading_regs(self) -> FrozenSet[int]:
+        c = self._opc
+        return (c or self._operand_cache())[5]
 
     def uses(self, reg: int) -> bool:
         return reg in self.regs()
@@ -499,19 +517,21 @@ class Kernel:
             rda=self.rda,
             arch=self.arch,
         )
+        items = k.items
         for it in self.items:
             if isinstance(it, Instr):
-                k.items.append(
-                    dataclasses.replace(
-                        it,
-                        dsts=list(it.dsts),
-                        srcs=list(it.srcs),
-                        ctrl=it.ctrl.copy(),
-                        uid=_next_uid(),
+                # positional construction (fields in declaration order);
+                # dataclasses.replace costs a kwargs dict + field walk per
+                # instruction, which dominates copy() on the search hot path
+                items.append(
+                    Instr(
+                        it.op, list(it.dsts), list(it.srcs), it.imm,
+                        it.offset, it.target, it.pred, it.pred_neg,
+                        it.pdst, it.ctrl.copy(), it.trip_count, it.tag,
                     )
                 )
             else:
-                k.items.append(Label(it.name, uid=_next_uid()))
+                items.append(Label(it.name, uid=_next_uid()))
         return k
 
     def render(self) -> str:

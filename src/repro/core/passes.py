@@ -385,16 +385,20 @@ class BarrierTracker:
     def update(self, inst: Instr) -> None:
         """Fig. 3 ``UpdateBarrierTracker`` (waits cleared before records so
         that a forced reuse in :meth:`get_barrier` stays consistent)."""
-        for b in inst.ctrl.wait:
-            if self.slots[b] is not None and self.slots[b][0] is not inst:
-                self.slots[b] = None
-        if inst.ctrl.read_bar is not None:
-            self.slots[inst.ctrl.read_bar] = [inst, 0]
-        if inst.ctrl.write_bar is not None:
-            self.slots[inst.ctrl.write_bar] = [inst, 0]
-        for b in range(self.num_barriers):
-            if self.slots[b] is not None and self.slots[b][0] is not inst:
-                self.slots[b][1] += inst.ctrl.stall
+        slots = self.slots
+        ctrl = inst.ctrl
+        for b in ctrl.wait:
+            s = slots[b]
+            if s is not None and s[0] is not inst:
+                slots[b] = None
+        if ctrl.read_bar is not None:
+            slots[ctrl.read_bar] = [inst, 0]
+        if ctrl.write_bar is not None:
+            slots[ctrl.write_bar] = [inst, 0]
+        stall = ctrl.stall
+        for s in slots:
+            if s is not None and s[0] is not inst:
+                s[1] += stall
 
 
 # ---------------------------------------------------------------------------
@@ -472,20 +476,25 @@ def demote_register(
         if isinstance(ins_or_label, Instr):
             nonlocal pending_next_wait
             ins = ins_or_label
+            ctrl = ins.ctrl
             if pending_next_wait:
-                ins.ctrl.wait |= pending_next_wait
+                ctrl.wait |= pending_next_wait
                 pending_next_wait = set()
-            # WAR guard against in-flight store reads
-            for rw in ins.dst_words():
-                if rw in pending_read:
-                    ins.ctrl.wait.add(pending_read.pop(rw))
-            for b in ins.ctrl.wait:
-                for rw in [r for r, bb in pending_read.items() if bb == b]:
-                    del pending_read[rw]
-            if ins.ctrl.read_bar is not None:
+            if pending_read:
+                # WAR guard against in-flight store reads
+                for rw in ins.dst_words():
+                    if rw in pending_read:
+                        ctrl.wait.add(pending_read.pop(rw))
+                if pending_read and ctrl.wait:
+                    waits = ctrl.wait
+                    for rw in [
+                        r for r, bb in pending_read.items() if bb in waits
+                    ]:
+                        del pending_read[rw]
+            if ctrl.read_bar is not None:
                 for rw in ins.src_words():
                     if rw != RZ:
-                        pending_read[rw] = ins.ctrl.read_bar
+                        pending_read[rw] = ctrl.read_bar
             tracker.update(ins)
             prev_real = ins
 

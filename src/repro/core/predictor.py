@@ -141,7 +141,7 @@ def fit_occupancy_curve(threads_per_block: int = 128) -> List[Tuple[float, float
     """
     from .isa import Instr
     from .kernelgen import Profile, generate
-    from .simcache import simulate_cached
+    from .simcache import DEFAULT_SIM_CACHE
 
     prof = Profile(
         name="occ_micro",
@@ -159,15 +159,20 @@ def fit_occupancy_curve(threads_per_block: int = 128) -> List[Tuple[float, float
         seed=1234,
     )
     base = generate(prof)
-    results: List[Tuple[float, float]] = []
+    variants = []
     for pad_regs in (32, 40, 48, 64, 84, 96, 128, 168, 255):
         k = base.copy()
         if pad_regs > k.reg_count:
             # touch a high register once: same dynamic behaviour, padded
             # register footprint (the occupancy-calculator sees pad_regs)
             k.items.insert(0, Instr("MOV", [pad_regs - 1], [255]))
-        sim = simulate_cached(k)
-        results.append((sim.occupancy.occupancy, float(sim.total_cycles)))
+        variants.append(k)
+    # one batched sweep: pad values below reg_count dedup to the base kernel
+    # through the cache, the rest share the engine's checkpoint store
+    sims = DEFAULT_SIM_CACHE.simulate_batch(variants)
+    results: List[Tuple[float, float]] = [
+        (sim.occupancy.occupancy, float(sim.total_cycles)) for sim in sims
+    ]
     agg: Dict[float, List[float]] = {}
     for occ, t in results:
         agg.setdefault(round(occ, 4), []).append(t)

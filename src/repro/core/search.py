@@ -94,8 +94,14 @@ class SearchConfig:
     workers: int = 0
     #: pool-worker RNG seed (hygiene only: no task draws randomness)
     seed: int = 0
-    #: pass-pipeline self-check policy for every variant built
-    verify: str = "final"
+    #: pass-pipeline self-check policy.  The default ``"chosen"`` builds
+    #: variants unchecked and verifies only the winning kernel (schedule +
+    #: dataflow equivalence vs its arch baseline) once, after selection —
+    #: what ships is always verified, and the N-1 losing pipeline runs skip
+    #: the oracle.  Any :class:`~repro.core.passes.PassPipeline` policy
+    #: (``"each"``/``"schedule"``/``"final"``/``"none"``) applies to every
+    #: variant instead.
+    verify: str = "chosen"
     #: attribute stall cycles per instruction/reason for every confirmed
     #: variant (:attr:`SearchReport.stall_profiles`) — extra profiled
     #: simulator runs, so off by default
@@ -267,11 +273,32 @@ def _task_obs_end(tel_state: tuple) -> tuple:
     return tuple(t.export_events(mark)), t.registry.export()
 
 
-def _expand_one(payload: tuple) -> tuple:
+def _build_variant(base, target, strategy, flags, verify, cache):
     """Build + predictor-score one demotion variant.
 
-    Pure function of the payload; runs identically in-process and in a pool
-    worker.  Returns ``(index, kernel_blob, regs, demoted_words, occupancy,
+    Pure function of its inputs — the in-process stage loop and the pool
+    task (:func:`_expand_one`) both run exactly this, so pool size can
+    never change a result.  Returns ``(DemotionResult, occupancy, stalls)``
+    with the stall estimate measured through ``cache``.
+    """
+    bank, elim, resched, subst = flags
+    opts = RegDemOptions(
+        candidate_strategy=strategy,
+        bank_avoid=bank,
+        elim_redundant=elim,
+        reschedule=resched,
+        substitute=subst,
+    )
+    res = demote(base, target, opts, verify=verify)
+    occ = achieved_occupancy(res.kernel)
+    stalls = cache.estimate_stalls(res.kernel, occ)
+    return res, occ, stalls
+
+
+def _expand_one(payload: tuple) -> tuple:
+    """Pool-worker wrapper of :func:`_build_variant`: deserialize the base,
+    build + score into a private cache, ship everything back picklable.
+    Returns ``(index, kernel_blob, regs, demoted_words, occupancy,
     raw_stalls, cache_export, obs_export)``.
     """
     (index, base_blob, target, strategy, flags, verify, tel) = payload
@@ -280,18 +307,8 @@ def _expand_one(payload: tuple) -> tuple:
     tel_state = _task_obs_begin(tel)
     with obs.span("search.variant", index=index, target=target):
         base = container.loads(base_blob)
-        bank, elim, resched, subst = flags
-        opts = RegDemOptions(
-            candidate_strategy=strategy,
-            bank_avoid=bank,
-            elim_redundant=elim,
-            reschedule=resched,
-            substitute=subst,
-        )
-        res = demote(base, target, opts, verify=verify)
         cache = SimCache()
-        occ = achieved_occupancy(res.kernel)
-        stalls = cache.estimate_stalls(res.kernel, occ)
+        res, occ, stalls = _build_variant(base, target, strategy, flags, verify, cache)
     return (
         index,
         container.dumps(res.kernel),
@@ -483,17 +500,41 @@ def _search_impl(
             for strat in config.strategies:
                 specs.append((arch, tgt, strat, probe_flags))
 
+    #: the pipeline self-check each variant build runs ("chosen" defers
+    #: all verification to the single post-selection winner check)
+    pipeline_verify = "none" if config.verify == "chosen" else config.verify
+
     def run_stage(stage_specs, stage_name):
-        payloads = [
-            (i, blobs[arch], tgt, strat, flags, config.verify, tel)
-            for i, (arch, tgt, strat, flags) in enumerate(stage_specs)
-        ]
+        in_process = config.workers <= 1 or len(stage_specs) <= 1
+        rows = []  # (kernel, regs, demoted_words, occupancy, stalls)
         with obs.span(f"search.{stage_name}", variants=len(stage_specs)):
-            results = _pool_map(_expand_one, payloads, config.workers, config.seed)
-        for (arch, tgt, strat, flags), res in zip(stage_specs, results):
-            (_, blob, regs, words, occ, stalls, export, obs_export) = res
-            cache.merge(export)
-            _adopt_obs(obs_export)
+            if in_process:
+                # the pool task's exact work minus its container round-trips,
+                # measured straight into the parent cache
+                for i, (arch, tgt, strat, flags) in enumerate(stage_specs):
+                    with obs.span("search.variant", index=i, target=tgt):
+                        res, occ, stalls = _build_variant(
+                            bases[arch], tgt, strat, flags, pipeline_verify, cache
+                        )
+                    rows.append(
+                        (res.kernel, res.kernel.reg_count, res.demoted_words,
+                         occ, stalls)
+                    )
+            else:
+                payloads = [
+                    (i, blobs[arch], tgt, strat, flags, pipeline_verify, tel)
+                    for i, (arch, tgt, strat, flags) in enumerate(stage_specs)
+                ]
+                results = _pool_map(
+                    _expand_one, payloads, config.workers, config.seed
+                )
+                for (_, blob, regs, words, occ, stalls, export, obs_export) in results:
+                    cache.merge(export)
+                    _adopt_obs(obs_export)
+                    rows.append((container.loads(blob), regs, words, occ, stalls))
+        for (arch, tgt, strat, flags), (k_out, regs, words, occ, stalls) in zip(
+            stage_specs, rows
+        ):
             opts_label = RegDemOptions(
                 candidate_strategy=strat,
                 bank_avoid=flags[0],
@@ -513,7 +554,7 @@ def _search_impl(
                 stalls=stalls,
                 stage=stage_name,
             )
-            kernels[label] = container.loads(blob)
+            kernels[label] = k_out
 
     run_stage(specs, "beam")
 
@@ -588,20 +629,48 @@ def _search_impl(
         {v.label for v in scored.values() if v.stage in ("baseline", "anchor")}
         | {v.label for v in top}
     )
-    pending: List[tuple] = []
+    pending_labels: List[str] = []
     cycles: Dict[str, int] = {}
-    for i, label in enumerate(confirm):
+    for label in confirm:
         hit = cache.peek_simulate(kernels[label])
         if hit is not None and not config.profile:
             cycles[label] = hit.total_cycles
         else:
-            pending.append((i, container.dumps(kernels[label]), config.profile, tel))
-    with obs.span("search.confirm", variants=len(confirm), pool=len(pending)):
-        sim_results = _pool_map(_simulate_one, pending, config.workers, config.seed)
-    for (i, _, _, _), (_, res, export, obs_export) in zip(pending, sim_results):
-        cache.merge(export)
-        _adopt_obs(obs_export)
-        cycles[confirm[i]] = res.total_cycles
+            pending_labels.append(label)
+    in_process = config.workers <= 1 or len(pending_labels) <= 1
+    with obs.span(
+        "search.confirm",
+        variants=len(confirm),
+        pool=0 if in_process else len(pending_labels),
+    ):
+        if in_process:
+            # batched sweep straight through the parent cache: no
+            # serialization round-trips, and variants that share a schedule
+            # prefix resume each other's checkpoints (element-wise identical
+            # to per-variant simulation — the pooled path below measures the
+            # very same results into worker-private caches)
+            for label, res in zip(
+                pending_labels,
+                cache.simulate_batch(
+                    [kernels[lb] for lb in pending_labels],
+                    profile=config.profile,
+                ),
+            ):
+                cycles[label] = res.total_cycles
+        else:
+            pending = [
+                (i, container.dumps(kernels[lb]), config.profile, tel)
+                for i, lb in enumerate(pending_labels)
+            ]
+            sim_results = _pool_map(
+                _simulate_one, pending, config.workers, config.seed
+            )
+            for lb, (_, res, export, obs_export) in zip(
+                pending_labels, sim_results
+            ):
+                cache.merge(export)
+                _adopt_obs(obs_export)
+                cycles[lb] = res.total_cycles
     for label in confirm:
         scored[label].cycles = cycles[label]
 
@@ -650,5 +719,27 @@ def _search_impl(
         seconds=time.perf_counter() - t0,
     )
     winner = kernels[chosen]
+    if config.verify == "chosen" and scored[chosen].stage in ("beam", "expand"):
+        _verify_winner(bases[scored[chosen].arch], winner, chosen)
     # never hand back an alias of the caller's kernel or an anchor
     return SearchOutcome(kernel=winner.copy(), report=report)
+
+
+def _verify_winner(base: Kernel, winner: Kernel, label: str) -> None:
+    """The ``verify="chosen"`` deferred self-check: the one kernel a search
+    ships gets the full schedule + dataflow-equivalence oracle (baselines
+    and anchors are verified where they were built)."""
+    from .isa import equivalent
+    from .passes import PassVerificationError
+    from .sched import verify_schedule
+
+    errs = verify_schedule(winner)
+    if errs:
+        raise PassVerificationError(
+            f"search winner {label!r} has schedule violations: {errs[:3]}"
+        )
+    if not equivalent(base, winner):
+        raise PassVerificationError(
+            f"search winner {label!r} is not dataflow-equivalent to its "
+            f"arch baseline"
+        )

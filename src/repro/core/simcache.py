@@ -33,7 +33,7 @@ from repro.obs.stallprof import StallProfile
 
 from .isa import Kernel
 from .occupancy import SMConfig
-from .simulator import SimResult, simulate
+from .simulator import CheckpointStore, SimResult, simulate
 
 
 def _guard(kernel: Kernel) -> str:
@@ -69,6 +69,11 @@ class SimCache:
         self._stalls: Dict[tuple, Tuple[str, float]] = {}
         #: (crc, sm, max_cycles) -> (render, StallProfile)
         self._profiles: Dict[tuple, Tuple[str, StallProfile]] = {}
+        #: resumable issue-loop states for incremental re-simulation: a miss
+        #: on the full-result tables can still resume mid-trace from the
+        #: deepest checkpoint whose schedule prefix matches (simulator-owned
+        #: keying; exactness is the checkpoint's validity condition)
+        self.checkpoints = CheckpointStore()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -78,6 +83,8 @@ class SimCache:
 
     @property
     def hit_rate(self) -> float:
+        """Hit fraction; raises :class:`ValueError` before any access (a
+        rate over zero traffic is undefined, not 0%)."""
         return _hit_rate(self.hits, self.misses)
 
     def stats(self) -> Dict[str, float]:
@@ -86,16 +93,19 @@ class SimCache:
             "misses": self.misses,
             "evictions": self.evictions,
             "capacity": self.max_entries,
-            "hit_rate": round(self.hit_rate, 3),
+            "hit_rate": round(_hit_rate(self.hits, self.misses, default=0.0), 3),
             "sim_entries": len(self._sims),
             "stall_entries": len(self._stalls),
             "profile_entries": len(self._profiles),
+            "checkpoint_entries": len(self.checkpoints),
+            "checkpoint_reuse_rate": round(self.checkpoints.reuse_rate, 3),
         }
 
     def clear(self) -> None:
         self._sims.clear()
         self._stalls.clear()
         self._profiles.clear()
+        self.checkpoints.clear()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -145,7 +155,12 @@ class SimCache:
 
         ``sm=None`` resolves to the kernel's architecture SM configuration
         *before* keying, so the same kernel simulated with and without an
-        explicit (identical) SMConfig shares one cache entry."""
+        explicit (identical) SMConfig shares one cache entry.
+
+        A full-result miss still goes through :attr:`checkpoints`: the run
+        resumes from the deepest valid mid-trace state a sibling kernel
+        captured and contributes its own captures back (incremental
+        re-simulation)."""
         if sm is None:
             from repro.arch import arch_of
 
@@ -155,7 +170,7 @@ class SimCache:
         hit = self._get(self._sims, key, render)
         if hit is not None:
             return dataclasses.replace(hit)
-        res = simulate(kernel, sm, max_cycles)
+        res = simulate(kernel, sm, max_cycles, checkpoints=self.checkpoints)
         self._put(self._sims, key, render, res)
         return dataclasses.replace(res)
 
@@ -201,7 +216,9 @@ class SimCache:
         hit = self._get(self._profiles, key, render)
         if hit is not None:
             return hit
-        res = simulate(kernel, sm, max_cycles, profile=True)
+        res = simulate(
+            kernel, sm, max_cycles, profile=True, checkpoints=self.checkpoints
+        )
         prof = res.stall_profile
         self._put(self._profiles, key, render, prof)
         if key not in self._sims:
@@ -209,6 +226,26 @@ class SimCache:
                 self._sims, key, render, dataclasses.replace(res, stall_profile=None)
             )
         return prof
+
+    def simulate_batch(
+        self,
+        kernels,
+        sm: Optional[SMConfig] = None,
+        max_cycles: int = 50_000_000,
+        profile: bool = False,
+    ):
+        """Batched :meth:`simulate`/:meth:`profile` over sibling kernels.
+
+        Delegates to :func:`repro.core.simulator.simulate_batch` with this
+        cache plugged in: content-identical members dedup through the
+        result tables, and distinct members that share a schedule prefix
+        resume each other's checkpoints.  Element-wise identical to calling
+        :meth:`simulate` per kernel."""
+        from .simulator import simulate_batch as _simulate_batch
+
+        return _simulate_batch(
+            kernels, sm, max_cycles, profile=profile, cache=self
+        )
 
     def estimate_stalls(self, kernel: Kernel, occupancy: float) -> float:
         """:func:`repro.core.predictor.estimate_stalls`, content-cached.
@@ -236,7 +273,9 @@ class SimCache:
         A search-pool worker runs with a fresh private cache, does its
         measurements, and ships the entries back to the parent so the
         process-wide cache ends a parallel search exactly as warm as a
-        serial one would leave it."""
+        serial one would leave it.  Checkpoints stay local: they are
+        mid-trace engine states, bulky and machine-local by nature, and
+        re-deriving them is one partial simulation."""
         return {
             "sims": dict(self._sims),
             "stalls": dict(self._stalls),

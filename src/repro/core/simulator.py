@@ -32,25 +32,42 @@ issue loop**:
 1. :func:`compile_trace` flattens the dynamic stream once and lowers every
    *unique static instruction* to a flat numeric record — op-class index,
    issue cost (stall + register-bank conflicts), scoreboard wait set,
-   write/read barrier index, and signal latencies.  The dynamic trace
-   becomes a list of record indices, so the hot loop touches no
+   write/read barrier index, and signal latencies.  Records live in numpy
+   arrays; the per-dynamic-position views the issue loop runs over are
+   gathered with one fancy-index per field, so the hot loop touches no
    :class:`~repro.core.isa.Instr` objects, no properties and no
    generator expressions.
 2. :func:`_issue_loop` replays the exact scheduling semantics of the
    original cycle-by-cycle engine over those records, caching each warp's
    next-possible-issue time (it only changes when that warp issues — the
    scoreboard is per-warp state) and skipping idle spans to the next event.
+   When the toolchain's C compiler is present (it is baked into the image)
+   the loop runs as a natively compiled translation of the same algorithm
+   (:mod:`repro.core._native`); the pure-Python loop is the always-available
+   fallback and the two are state-for-state identical.  Either engine can
+   additionally capture **resumable checkpoints** at trace-position
+   milestones and later resume from one, so re-simulating a kernel whose
+   schedule only changed in a suffix replays only the suffix
+   (:class:`SimCheckpoint` / :class:`CheckpointStore`;
+   ``repro.core.simcache.SimCache`` persists these alongside results).
 
-The pre-optimization engine is preserved verbatim as
-:func:`simulate_reference`; the golden parity test pins
-``simulate() == simulate_reference()`` cycle-exactly across every paper
-benchmark × variant.
+Every acceleration is exact: the golden parity test pins
+``simulate() == simulate_reference()`` cycle-for-cycle across every paper
+benchmark × variant, and property tests drive random kernels through
+checkpointed, batched and profiled runs against the reference engine.
+:func:`simulate_batch` runs a set of sibling variants through one
+checkpoint store in prefix-sharing order — the search's confirm stage and
+``make_variants`` scoring cost one sweep instead of N cold runs.
 """
 
 from __future__ import annotations
 
+import heapq
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro import obs
 from repro.obs.stallprof import R_BANK, R_BAR, R_MEM, R_STALL, R_UNIT, StallProfile
@@ -102,16 +119,38 @@ def _signal_latency(ins: Instr, arch=None) -> int:
     return k.latency
 
 
-def flatten_trace(kernel: Kernel, max_len: int = 200_000) -> List[Instr]:
+class Trace(list):
+    """Dynamic instruction stream of one warp.
+
+    A plain list of :class:`~repro.core.isa.Instr` with one extra bit:
+    ``truncated`` is True when the expansion hit ``max_len`` and the tail
+    was dropped — capped simulations must be visible, never silent.
+    """
+
+    truncated: bool = False
+
+
+#: kernels already warned about a truncated trace (one warning per kernel
+#: per process; the telemetry counter counts every occurrence)
+_TRUNCATION_WARNED: set = set()
+
+
+def flatten_trace(kernel: Kernel, max_len: int = 200_000) -> "Trace":
     """Expand the dynamic instruction stream of one warp.
 
     Backward branches with ``trip_count`` metadata loop that many times;
     unpredicated forward branches are taken; predicated forward branches
     fall through (SIMT serialization of the cold path is approximated by
     the predicated instructions already present in the stream).
+
+    An expansion longer than ``max_len`` is truncated there, with the cap
+    made visible three ways (no-silent-caps rule): the returned
+    :class:`Trace` has ``truncated=True`` (propagated to
+    ``SimResult.truncated``), the ``simulator.trace_truncated`` telemetry
+    counter increments, and a one-time-per-kernel warning is emitted.
     """
     labels = {it.name: i for i, it in enumerate(kernel.items) if isinstance(it, Label)}
-    trace: List[Instr] = []
+    trace = Trace()
     counters: Dict[int, int] = {}
     pc = 0
     while pc < len(kernel.items):
@@ -120,9 +159,21 @@ def flatten_trace(kernel: Kernel, max_len: int = 200_000) -> List[Instr]:
             pc += 1
             continue
         ins: Instr = it
+        if len(trace) >= max_len:
+            trace.truncated = True
+            if obs.enabled():
+                obs.metrics().counter("simulator.trace_truncated").inc()
+            if kernel.name not in _TRUNCATION_WARNED:
+                _TRUNCATION_WARNED.add(kernel.name)
+                warnings.warn(
+                    f"{kernel.name}: dynamic trace exceeds {max_len} "
+                    f"instructions; simulation runs on the truncated prefix "
+                    f"(SimResult.truncated=True)",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+            break
         trace.append(ins)
-        if len(trace) > max_len:
-            raise RuntimeError(f"{kernel.name}: dynamic trace exceeds {max_len}")
         if ins.info.is_exit:
             break
         if ins.info.is_branch:
@@ -157,6 +208,9 @@ class SimResult:
     #: only by ``simulate(..., profile=True)``; its total balances exactly
     #: against ``issue_stalls``
     stall_profile: Optional[StallProfile] = None
+    #: True when the dynamic trace hit the ``flatten_trace`` length cap and
+    #: the simulation ran on a truncated prefix
+    truncated: bool = False
 
 
 #: stable integer index per op class (trace-record encoding)
@@ -172,20 +226,23 @@ class CompiledTrace:
 
     ``code[i]`` indexes the record arrays for the i-th dynamic instruction;
     every unique static instruction is lowered exactly once, so loops cost
-    one record however many times they expand.
+    one record however many times they expand.  All numeric fields are
+    numpy int arrays (``len``, iteration and indexing behave like the
+    former list encoding); ``waits`` stays a list of tuples — wait sets are
+    ragged and consumed as tuples by the issue loop.
     """
 
-    code: List[int] = field(default_factory=list)   # dynamic stream -> record index
-    klass: List[int] = field(default_factory=list)  # op-class index (into _KLASS_INTERVAL)
-    cost: List[int] = field(default_factory=list)   # issue cost: max(1, stall) + bank conflicts
-    waits: List[Tuple[int, ...]] = field(default_factory=list)  # scoreboard barriers gating issue
-    write_bar: List[int] = field(default_factory=list)  # barrier signalled at result latency (-1: none)
-    read_bar: List[int] = field(default_factory=list)   # barrier signalled at operand read (-1: none)
-    write_lat: List[int] = field(default_factory=list)  # producer signal latency
-    read_lat: List[int] = field(default_factory=list)   # operand-read signal latency
-    uid: List[int] = field(default_factory=list)        # static Instr.uid per record
-    conflicts: List[int] = field(default_factory=list)  # bank-conflict share of cost
-    is_mem: List[int] = field(default_factory=list)     # 1 = memory-class producer
+    code: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    klass: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    cost: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    waits: List[Tuple[int, ...]] = field(default_factory=list)
+    write_bar: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    read_bar: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    write_lat: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    read_lat: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    uid: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    conflicts: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    is_mem: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
 
     def __len__(self) -> int:
         return len(self.code)
@@ -204,32 +261,233 @@ def compile_trace(trace: List[Instr], arch=None) -> CompiledTrace:
 
     ``arch`` supplies the machine model (bank conflicts, signal latencies,
     operand-read release cap); ``None`` keeps the Maxwell table."""
-    ct = CompiledTrace()
+    code: List[int] = []
+    klass: List[int] = []
+    cost: List[int] = []
+    waits: List[Tuple[int, ...]] = []
+    write_bar: List[int] = []
+    read_bar: List[int] = []
+    write_lat: List[int] = []
+    read_lat: List[int] = []
+    uid: List[int] = []
+    conflicts_l: List[int] = []
+    is_mem: List[int] = []
     rec_of: Dict[int, int] = {}
     read_cap = 20 if arch is None else arch.latency.read_release
     for ins in trace:
         j = rec_of.get(ins.uid)
         if j is None:
-            j = len(ct.klass)
+            j = len(klass)
             rec_of[ins.uid] = j
             ctrl = ins.ctrl
             conflicts = (
                 ins.reg_bank_conflicts() if arch is None else arch.bank_conflicts(ins)
             )
             ki = _KLASS_INDEX[ins.info.klass]
-            ct.klass.append(ki)
-            ct.cost.append(max(1, ctrl.stall) + conflicts)
-            ct.waits.append(tuple(sorted(ctrl.wait)))
-            ct.write_bar.append(-1 if ctrl.write_bar is None else ctrl.write_bar)
-            ct.read_bar.append(-1 if ctrl.read_bar is None else ctrl.read_bar)
+            klass.append(ki)
+            cost.append(max(1, ctrl.stall) + conflicts)
+            waits.append(tuple(sorted(ctrl.wait)))
+            write_bar.append(-1 if ctrl.write_bar is None else ctrl.write_bar)
+            read_bar.append(-1 if ctrl.read_bar is None else ctrl.read_bar)
             lat = _signal_latency(ins, arch)
-            ct.write_lat.append(lat)
-            ct.read_lat.append(min(lat, read_cap))
-            ct.uid.append(ins.uid)
-            ct.conflicts.append(conflicts)
-            ct.is_mem.append(1 if ki in _MEM_KLASS else 0)
-        ct.code.append(j)
-    return ct
+            write_lat.append(lat)
+            read_lat.append(min(lat, read_cap))
+            uid.append(ins.uid)
+            conflicts_l.append(conflicts)
+            is_mem.append(1 if ki in _MEM_KLASS else 0)
+        code.append(j)
+    return CompiledTrace(
+        code=np.asarray(code, dtype=np.int64),
+        klass=np.asarray(klass, dtype=np.int64),
+        cost=np.asarray(cost, dtype=np.int64),
+        waits=waits,
+        write_bar=np.asarray(write_bar, dtype=np.int64),
+        read_bar=np.asarray(read_bar, dtype=np.int64),
+        write_lat=np.asarray(write_lat, dtype=np.int64),
+        read_lat=np.asarray(read_lat, dtype=np.int64),
+        uid=np.asarray(uid, dtype=np.int64),
+        conflicts=np.asarray(conflicts_l, dtype=np.int64),
+        is_mem=np.asarray(is_mem, dtype=np.int64),
+    )
+
+
+def position_signatures(ct: CompiledTrace) -> List[tuple]:
+    """Per-dynamic-position engine-visible signature of a compiled trace.
+
+    ``sigs[p]`` captures everything the issue loop reads about position
+    ``p`` — record index, op class, cost, wait set, barrier slots, signal
+    latencies, conflicts and memory-ness.  Two compiled traces that agree
+    on ``sigs[:F+1]`` evolve identically while every warp's pc stays
+    ≤ ``F`` — this is the checkpoint-reuse validity condition (record
+    indices are first-occurrence ordinals, so an equal signature prefix
+    implies equal record numbering for every record referenced in it, which
+    keeps stall-attribution keys portable too).
+
+    The signature list is memoised on the trace and its element tuples are
+    shared per record, so a 100k-position loopy trace costs one tuple per
+    *static* instruction plus a pointer per position.
+    """
+    sigs = getattr(ct, "_pos_sigs", None)
+    if sigs is None:
+        klass = ct.klass.tolist()
+        cost = ct.cost.tolist()
+        wbar = ct.write_bar.tolist()
+        rbar = ct.read_bar.tolist()
+        wlat = ct.write_lat.tolist()
+        rlat = ct.read_lat.tolist()
+        confl = ct.conflicts.tolist()
+        mem = ct.is_mem.tolist()
+        rec_sigs = [
+            (j, klass[j], cost[j], wbar[j], rbar[j], wlat[j], rlat[j],
+             confl[j], mem[j], ct.waits[j])
+            for j in range(len(ct.klass))
+        ]
+        sigs = [rec_sigs[j] for j in ct.code.tolist()]
+        ct._pos_sigs = sigs
+    return sigs
+
+
+@dataclass
+class SimCheckpoint:
+    """A resumable issue-loop state, captured at a trace-position milestone.
+
+    Valid to resume any kernel whose :func:`position_signatures` agree with
+    the captured kernel's on ``[0, frontier]`` (no warp had advanced past
+    ``frontier``), under the same (n_warps, intervals, issue_width,
+    num_barriers) family, for any ``max_cycles`` greater than ``cycle``.
+    ``profiled`` checkpoints carry the stall-attribution books and can seed
+    both profiled and plain runs; unprofiled ones only seed plain runs (a
+    profiled run resumed without its books could never balance).
+    """
+
+    frontier: int
+    cycle: float
+    idle_cycles: int
+    rr: int
+    pc: Tuple[int, ...]
+    next_time: Tuple[float, ...]
+    bars: Tuple[Tuple[float, ...], ...]
+    unit_free: Tuple[float, ...]
+    profiled: bool = False
+    blame: Optional[Dict[Tuple[int, str], int]] = None
+    warp_blame: Optional[Tuple[Tuple[int, str], ...]] = None
+    bar_setter: Optional[Tuple[Tuple[int, ...], ...]] = None
+
+
+class CheckpointStore:
+    """Content-keyed store of :class:`SimCheckpoint` entries.
+
+    Keys are ``(family, frontier, signature-prefix-tuple)`` — the full
+    engine-visible prefix is the collision guard (a checkpoint is never
+    served to a kernel it is not exactly valid for).  Signature tuples are
+    shared per static record, so stored prefixes cost pointers, not copies.
+    FIFO-bounded like the other caches; ``reuse_rate`` reports the
+    position-weighted fraction of simulated work served from checkpoints.
+    """
+
+    def __init__(self, max_entries: Optional[int] = 256):
+        self.max_entries = max_entries
+        self._entries: Dict[tuple, SimCheckpoint] = {}
+        #: family -> descending list of frontiers ever stored (probe order)
+        self._lengths: Dict[tuple, List[int]] = {}
+        self.hits = 0
+        self.misses = 0
+        self.positions_total = 0
+        self.positions_resumed = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def reuse_rate(self) -> float:
+        """Fraction of dynamic trace positions skipped by resuming."""
+        if not self.positions_total:
+            return 0.0
+        return self.positions_resumed / self.positions_total
+
+    def lookup(
+        self,
+        family: tuple,
+        sigs: List[tuple],
+        max_cycles: int,
+        profiled: bool,
+    ) -> Optional[SimCheckpoint]:
+        """Deepest stored checkpoint exactly valid for this trace, or None."""
+        self.positions_total += len(sigs)
+        for frontier in self._lengths.get(family, ()):
+            if frontier + 1 >= len(sigs):
+                continue
+            cp = self._entries.get((family, frontier, tuple(sigs[: frontier + 1])))
+            if cp is None or cp.cycle >= max_cycles:
+                continue
+            if profiled and not cp.profiled:
+                continue
+            self.hits += 1
+            self.positions_resumed += frontier + 1
+            if obs.enabled():
+                obs.metrics().counter("simcache.ckpt_hits").inc()
+            return cp
+        self.misses += 1
+        if obs.enabled():
+            obs.metrics().counter("simcache.ckpt_misses").inc()
+        return None
+
+    def offer(
+        self, family: tuple, sigs: List[tuple], checkpoints: Sequence[SimCheckpoint]
+    ) -> int:
+        """Adopt captured checkpoints; an existing entry is only replaced
+        when the newcomer adds the stall-attribution books (a profiled
+        checkpoint serves both engines, a plain one only the plain engine).
+        Returns the number of entries stored."""
+        added = 0
+        for cp in checkpoints:
+            key = (family, cp.frontier, tuple(sigs[: cp.frontier + 1]))
+            old = self._entries.get(key)
+            if old is not None and (old.profiled or not cp.profiled):
+                continue
+            if (
+                old is None
+                and self.max_entries is not None
+                and len(self._entries) >= self.max_entries
+            ):
+                self._entries.pop(next(iter(self._entries)))
+            self._entries[key] = cp
+            lens = self._lengths.setdefault(family, [])
+            if cp.frontier not in lens:
+                lens.append(cp.frontier)
+                lens.sort(reverse=True)
+            added += 1
+        return added
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._lengths.clear()
+        self.hits = 0
+        self.misses = 0
+        self.positions_total = 0
+        self.positions_resumed = 0
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "reuse_rate": round(self.reuse_rate, 3),
+        }
+
+
+def _native_engine():
+    """The compiled issue loop (``_sim_engine.c`` via :mod:`._native`), or
+    ``None`` when unavailable / disabled — the Python loop then runs."""
+    from . import _native
+
+    return _native.engine()
+
+
+#: trace-length fractions at which the issue loop captures checkpoints
+_CKPT_FRACTIONS = (8, 4, 2)  # denominators: n/8, n/4, n/2 — plus 3n/4
+#: traces shorter than this are not worth checkpointing
+_CKPT_MIN_TRACE = 64
 
 
 def _issue_loop(
@@ -240,6 +498,8 @@ def _issue_loop(
     issue_width: int = ISSUE_WIDTH,
     num_barriers: int = NUM_BARRIERS,
     blame: Optional[Dict[Tuple[int, str], int]] = None,
+    resume: Optional[SimCheckpoint] = None,
+    capture: Optional[List[SimCheckpoint]] = None,
 ) -> Tuple[float, int]:
     """Stage 2: the event-driven issue loop; returns (cycles, idle_cycles).
 
@@ -259,18 +519,37 @@ def _issue_loop(
     setter); at idle time the warp whose event bounds the jump donates its
     recorded reason, and ready-but-unit-blocked warps charge the busy
     unit's instruction instead.
+
+    ``resume`` (optional) starts the loop from a previously captured
+    :class:`SimCheckpoint` instead of cycle 0; ``capture`` (optional) is a
+    list the loop appends fresh checkpoints to as the position frontier
+    crosses trace-length milestones.  Both are exact: a resumed run
+    finishes in the state a cold run would have reached.
+
+    When the native engine is available (:mod:`repro.core._native`) the
+    whole loop — blame, resume and capture included — runs compiled; this
+    Python body is the fallback and the conformance reference for it.
     """
+    native = _native_engine()
+    if native is not None:
+        return native(
+            ct, n_warps, max_cycles, intervals, issue_width, num_barriers,
+            blame, resume, capture,
+        )
     n_trace = len(ct.code)
     if n_trace == 0:
         return 0.0, 0
-    # per-dynamic-position record fields (one indirection instead of two)
-    code = ct.code
-    p_klass = [ct.klass[j] for j in code]
-    p_cost = [ct.cost[j] for j in code]
-    p_wbar = [ct.write_bar[j] for j in code]
-    p_rbar = [ct.read_bar[j] for j in code]
-    p_wlat = [ct.write_lat[j] for j in code]
-    p_rlat = [ct.read_lat[j] for j in code]
+    # per-dynamic-position record fields: one numpy gather per field, then
+    # plain lists for the scalar hot loop (list indexing beats ndarray
+    # scalar indexing by a wide margin in CPython)
+    code_a = ct.code
+    code = code_a.tolist()
+    p_klass = ct.klass[code_a].tolist()
+    p_cost = ct.cost[code_a].tolist()
+    p_wbar = ct.write_bar[code_a].tolist()
+    p_rbar = ct.read_bar[code_a].tolist()
+    p_wlat = ct.write_lat[code_a].tolist()
+    p_rlat = ct.read_lat[code_a].tolist()
     #: wait set of the *next* position (what the issuing warp blocks on);
     #: empty tuple past the end
     p_next_waits = [ct.waits[j] for j in code[1:]] + [()]
@@ -296,21 +575,110 @@ def _issue_loop(
         bar_setter = [[-1] * num_barriers for _ in range(n_warps)]
         warp_blame: List[Tuple[int, str]] = [(code[0], R_STALL)] * n_warps
 
+    frontier = 0
+    if resume is not None:
+        pc = list(resume.pc)
+        next_time = list(resume.next_time)
+        bars = [list(bw) for bw in resume.bars]
+        unit_free = list(resume.unit_free)
+        cycle = resume.cycle
+        idle_cycles = resume.idle_cycles
+        rr = resume.rr
+        frontier = resume.frontier
+        if blame is not None:
+            blame.update(resume.blame)
+            warp_blame = list(resume.warp_blame)
+            bar_setter = [list(bs) for bs in resume.bar_setter]
+
+    # event-driven ready tracking: a per-class bitmask of ready warps (bit w
+    # set = warp w's next instruction is class c and its scoreboard allows
+    # issue) plus a min-heap of (wake time, warp) for blocked warps.  The
+    # issue scan walks set bits in round-robin rotation instead of scanning
+    # every warp every cycle, so a unit-saturated cycle costs O(classes);
+    # heap tuple order (time, warp) reproduces the reference engine's
+    # first-strict-minimum tie-breaking exactly.
+    heappush = heapq.heappush
+    heappop = heapq.heappop
+    n_classes = len(intervals)
+    class_masks = [0] * n_classes
+    heap: List[Tuple[float, int]] = []
+    for w in range(n_warps):
+        v = next_time[w]
+        if v <= cycle:
+            class_masks[p_klass[pc[w]]] |= 1 << w
+        else:
+            heap.append((v, w))
+    if heap:
+        heapq.heapify(heap)
+    full_mask = (1 << n_warps) - 1
+
+    # checkpoint capture milestones (positions the frontier must cross)
+    thresholds: List[int] = []
+    if capture is not None and n_trace >= _CKPT_MIN_TRACE:
+        marks = {n_trace // d for d in _CKPT_FRACTIONS}
+        marks.add((3 * n_trace) // 4)
+        thresholds = sorted(m for m in marks if frontier < m < n_trace)
+
     while n_done < n_warps and cycle < max_cycles:
-        issued = 0
+        while heap and heap[0][0] <= cycle:
+            _, w = heappop(heap)
+            class_masks[p_klass[pc[w]]] |= 1 << w
+        if thresholds and n_done == 0 and frontier >= thresholds[0]:
+            while thresholds and frontier >= thresholds[0]:
+                thresholds.pop(0)
+            capture.append(
+                SimCheckpoint(
+                    frontier=frontier,
+                    cycle=cycle,
+                    idle_cycles=idle_cycles,
+                    rr=rr,
+                    pc=tuple(pc),
+                    next_time=tuple(next_time),
+                    bars=tuple(tuple(bw) for bw in bars),
+                    unit_free=tuple(unit_free),
+                    profiled=blame is not None,
+                    blame=dict(blame) if blame is not None else None,
+                    warp_blame=tuple(warp_blame) if blame is not None else None,
+                    bar_setter=(
+                        tuple(tuple(bs) for bs in bar_setter)
+                        if blame is not None
+                        else None
+                    ),
+                )
+            )
         cap = cycle + 1
-        for rot in (range(rr, n_warps), range(rr)):
-            for w in rot:
-                if next_time[w] > cycle:  # blocked, or done (parked at inf)
-                    continue
+        # classes whose unit still has capacity this cycle contribute their
+        # ready warps to the eligible set
+        elig = 0
+        for c in range(n_classes):
+            m = class_masks[c]
+            if m and unit_free[c] < cap:
+                elig |= m
+        if elig:
+            # visit eligible warps in round-robin rotation: bit i of the
+            # rotated mask is warp (rr + i) mod n_warps, and extracting
+            # ascending set bits replays the reference scan order exactly
+            rot = ((elig >> rr) | (elig << (n_warps - rr))) & full_mask
+            issued = 0
+            while rot:
+                lsb = rot & -rot
+                w = lsb.bit_length() - 1 + rr
+                if w >= n_warps:
+                    w -= n_warps
                 p = pc[w]
                 ki = p_klass[p]
                 uf = unit_free[ki]
-                # the unit blocks only once this cycle's capacity is spent
+                # the unit blocks only once this cycle's capacity is spent;
+                # a class saturated mid-cycle drops all its pending warps
+                # from the rotation, exactly as the reference skips them
                 if uf >= cap:
+                    cm = class_masks[ki]
+                    rot &= ~(((cm >> rr) | (cm << (n_warps - rr))) & full_mask)
                     continue
                 # ---- issue -------------------------------------------------
+                rot ^= lsb
                 issued += 1
+                class_masks[ki] &= ~(1 << w)
                 unit_free[ki] = (uf if uf > cycle else cycle) + intervals[ki]
                 t = cycle + p_cost[p]
                 bw = bars[w]
@@ -330,6 +698,8 @@ def _issue_loop(
                         bs[p_rbar[p]] = j
                 p += 1
                 pc[w] = p
+                if p > frontier:
+                    frontier = p
                 if p >= n_trace:
                     n_done += 1
                     next_time[w] = inf
@@ -341,6 +711,7 @@ def _issue_loop(
                             if v > t:
                                 t = v
                     next_time[w] = t
+                    heappush(heap, (t, w))
                 else:
                     # same wait maximization, additionally tracking which
                     # event bounds t: the issued instruction's own cost
@@ -358,21 +729,19 @@ def _issue_loop(
                                 rec = sj
                                 reason = R_MEM if rec_mem[sj] else R_BAR
                     next_time[w] = t
+                    heappush(heap, (t, w))
                     warp_blame[w] = (rec, reason)
                 if issued >= issue_width:
                     break
-            if issued >= issue_width:
-                break
-        rr += 1
-        if rr >= n_warps:
-            rr = 0
-        if issued:
+            rr += 1
+            if rr >= n_warps:
+                rr = 0
             cycle += 1
         else:
             # Jump to the next time anything can happen.  Two distinct idle
             # shapes, both replayed exactly as the reference engine counts
-            # them (done warps sit at inf; the loop guard ensures at least
-            # one warp is live):
+            # them (done warps are in neither the masks nor the heap; the
+            # loop guard ensures at least one warp is live):
             #
             # * no warp is ready: one reference iteration jumps straight to
             #   the earliest warp-ready event (rr advances once);
@@ -382,19 +751,29 @@ def _issue_loop(
             #   floor(unit_free)) or another warp becomes ready — nothing
             #   can issue in between, so the k crawl cycles collapse into
             #   one iteration with rr += k and idle += k.
-            mn_wait = inf   # earliest blocked-warp ready time
+            #
+            # The heap top is the earliest blocked-warp event with the
+            # reference's first-strict-minimum warp tie-break ((time, warp)
+            # tuple order); the block bound scans classes, and the owning
+            # warp (attribution only) is the lowest set bit over the
+            # minimum's classes — the first warp the reference would have
+            # recorded.
+            rr += 1
+            if rr >= n_warps:
+                rr = 0
+            mn_wait = heap[0][0] if heap else inf
             mn_block = inf  # earliest unit-free event of a ready warp
-            w_wait = w_block = 0  # warps owning those bounds (attribution)
-            for w in range(n_warps):
-                v = next_time[w]
-                if v <= cycle:
-                    v = float(int(unit_free[p_klass[pc[w]]]))
-                    if v < mn_block:
-                        mn_block = v
-                        w_block = w
-                elif v < mn_wait:
-                    mn_wait = v
-                    w_wait = w
+            blk_mask = 0    # ready warps of the classes bounding mn_block
+            for c in range(n_classes):
+                m = class_masks[c]
+                if not m:
+                    continue
+                v = float(int(unit_free[c]))
+                if v < mn_block:
+                    mn_block = v
+                    blk_mask = m
+                elif v == mn_block:
+                    blk_mask |= m
             if mn_block < inf:
                 nxt = mn_block if mn_block < mn_wait else mn_wait
                 if nxt < cap:
@@ -409,19 +788,26 @@ def _issue_loop(
                 rr %= n_warps
                 if blame is not None and k:
                     if mn_block <= mn_wait:
+                        w_block = (blk_mask & -blk_mask).bit_length() - 1
                         key = (code[pc[w_block]], R_UNIT)
                     else:
-                        key = warp_blame[w_wait]
+                        key = warp_blame[heap[0][1]]
                     blame[key] = blame.get(key, 0) + k
             else:
                 nxt = mn_wait if mn_wait > cap else cap
                 k = int(nxt - cycle)
                 idle_cycles += k
                 if blame is not None and k:
-                    key = warp_blame[w_wait]
+                    key = warp_blame[heap[0][1]]
                     blame[key] = blame.get(key, 0) + k
             cycle = nxt
     return cycle, idle_cycles
+
+
+def _engine_family(n_warps: int, intervals: List[float], arch) -> tuple:
+    """Checkpoint compatibility key: everything the issue loop's evolution
+    depends on besides the compiled trace itself."""
+    return (n_warps, tuple(intervals), arch.issue_width, arch.num_barriers)
 
 
 def simulate(
@@ -429,6 +815,8 @@ def simulate(
     sm: Optional[SMConfig] = None,
     max_cycles: int = 50_000_000,
     profile: bool = False,
+    checkpoints: Optional[CheckpointStore] = None,
+    _prep: Optional[tuple] = None,
 ) -> SimResult:
     """Simulate one wave of resident warps on one SM; scale by wave count.
 
@@ -446,29 +834,52 @@ def simulate(
     ``SimResult.stall_profile``); the attribution is bookkeeping only —
     cycle counts are identical either way, and the profile total balances
     exactly against ``issue_stalls``.
+
+    ``checkpoints`` (optional) plugs in a :class:`CheckpointStore`: the run
+    resumes from the deepest exactly-valid captured state and contributes
+    fresh captures back — incremental re-simulation for kernels that share
+    a schedule prefix (``SimCache`` wires its own store through here).
+
+    ``_prep`` is internal: :func:`simulate_batch` already flattened and
+    compiled every member's trace to order the batch, and hands the work
+    over instead of paying the trace compiler twice per kernel.
     """
     with obs.span("simulate", kernel=kernel.name, profile=profile) as sp:
-        arch = _arch_of(kernel)
-        if sm is None:
-            sm = arch.sm
-        occ = occupancy_of(kernel, sm)
-        trace = flatten_trace(kernel)
+        if _prep is not None:
+            arch, sm, occ, trace, ct = _prep
+        else:
+            arch = _arch_of(kernel)
+            if sm is None:
+                sm = arch.sm
+            occ = occupancy_of(kernel, sm)
+            trace = flatten_trace(kernel)
+            ct = compile_trace(trace, arch)
         n_warps = max(occ.resident_warps, 1)
-        ct = compile_trace(trace, arch)
         intervals = [arch.issue_interval(k) for k in OpClass]
         blame: Optional[Dict[Tuple[int, str], int]] = {} if profile else None
+        resume = None
+        capture: Optional[List[SimCheckpoint]] = None
+        family = sigs = None
+        if checkpoints is not None:
+            sigs = position_signatures(ct)
+            family = _engine_family(n_warps, intervals, arch)
+            resume = checkpoints.lookup(family, sigs, max_cycles, profile)
+            capture = []
         cycle, idle_cycles = _issue_loop(
             ct, n_warps, max_cycles, intervals, arch.issue_width,
-            arch.num_barriers, blame,
+            arch.num_barriers, blame, resume=resume, capture=capture,
         )
+        if checkpoints is not None and capture:
+            checkpoints.offer(family, sigs, capture)
 
         stall_profile = None
         if profile:
             from repro.obs.stallprof import build_profile
 
             by_uid: Dict[Tuple[int, str], int] = {}
+            uid = ct.uid.tolist()
             for (rec, reason), c in blame.items():
-                key = (ct.uid[rec], reason)
+                key = (uid[rec], reason)
                 by_uid[key] = by_uid.get(key, 0) + c
             stall_profile = build_profile(kernel, by_uid, idle_cycles)
 
@@ -487,7 +898,68 @@ def simulate(
             dynamic_instructions=len(trace),
             issue_stalls=idle_cycles,
             stall_profile=stall_profile,
+            truncated=trace.truncated,
         )
+
+
+def simulate_batch(
+    kernels: Sequence[Kernel],
+    sm: Optional[SMConfig] = None,
+    max_cycles: int = 50_000_000,
+    profile: bool = False,
+    cache=None,
+    checkpoints: Optional[CheckpointStore] = None,
+) -> List[SimResult]:
+    """Simulate a batch of sibling kernels through one checkpoint store.
+
+    Element-wise identical to calling :func:`simulate` per kernel (the
+    differential property test pins this, stall books included) — the win
+    is scheduling: kernels are visited in signature-prefix order, so each
+    run resumes from the deepest checkpoint its predecessors captured, and
+    variants that only diverge in a schedule suffix replay only the suffix.
+
+    ``cache`` (optional, a ``repro.core.simcache.SimCache``) serves and
+    warms full results too, which additionally dedups content-identical
+    batch members; otherwise ``checkpoints`` (default: a fresh private
+    store) carries the intra-batch reuse.
+    """
+    kernels = list(kernels)
+    if not kernels:
+        return []
+    with obs.span("simulate_batch", kernels=len(kernels), profile=profile):
+        if checkpoints is None:
+            checkpoints = (
+                cache.checkpoints if cache is not None else CheckpointStore()
+            )
+        order = []
+        preps = []
+        for i, k in enumerate(kernels):
+            arch = _arch_of(k)
+            sm_k = sm if sm is not None else arch.sm
+            occ = occupancy_of(k, sm_k)
+            trace = flatten_trace(k)
+            ct = compile_trace(trace, arch)
+            intervals = [arch.issue_interval(kl) for kl in OpClass]
+            family = _engine_family(max(occ.resident_warps, 1), intervals, arch)
+            order.append((family, position_signatures(ct), i))
+            preps.append((arch, sm_k, occ, trace, ct))
+        order.sort(key=lambda t: (t[0], t[1]))
+        results: List[Optional[SimResult]] = [None] * len(kernels)
+        for _, _, i in order:
+            k = kernels[i]
+            if cache is not None:
+                if profile:
+                    prof = cache.profile(k, sm, max_cycles)
+                    res = cache.simulate(k, sm, max_cycles)
+                    res.stall_profile = prof
+                else:
+                    res = cache.simulate(k, sm, max_cycles)
+            else:
+                res = simulate(
+                    k, sm, max_cycles, profile, checkpoints, _prep=preps[i]
+                )
+            results[i] = res
+        return results
 
 
 def simulate_reference(
@@ -589,9 +1061,18 @@ def simulate_reference(
         occupancy=occ,
         dynamic_instructions=len(trace),
         issue_stalls=idle_cycles,
+        truncated=trace.truncated,
     )
 
 
 def speedup(base: SimResult, other: SimResult) -> float:
-    """Speedup of ``other`` over ``base`` (>1 means faster)."""
+    """Speedup of ``other`` over ``base`` (>1 means faster).
+
+    A zero-cycle denominator (an empty or fully truncated-away kernel) has
+    no meaningful ratio; that is an explicit error, never a
+    ZeroDivisionError from deep inside a report."""
+    if other.total_cycles == 0:
+        raise ValueError(
+            f"speedup undefined: {other.kernel_name} simulated to 0 cycles"
+        )
     return base.total_cycles / other.total_cycles

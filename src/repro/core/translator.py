@@ -237,6 +237,8 @@ class TranslationCache:
 
     @property
     def hit_rate(self) -> float:
+        """Hit fraction; raises :class:`ValueError` before any access (a
+        rate over zero traffic is undefined, not 0%)."""
         return _hit_rate(self.hits, self.misses)
 
     def stats(self) -> Dict[str, float]:
@@ -246,7 +248,7 @@ class TranslationCache:
             "evictions": self.evictions,
             "capacity": self.max_entries,
             "entries": len(self._entries),
-            "hit_rate": round(self.hit_rate, 3),
+            "hit_rate": round(_hit_rate(self.hits, self.misses, default=0.0), 3),
         }
 
     @staticmethod
@@ -321,7 +323,8 @@ class BatchTranslationReport:
 
     @property
     def hit_rate(self) -> float:
-        return _hit_rate(self.cache_hits, self.cache_misses)
+        # an empty batch reports 0.0 (display convention, not a decision)
+        return _hit_rate(self.cache_hits, self.cache_misses, default=0.0)
 
 
 class TranslationService:
@@ -547,7 +550,12 @@ def translate_binary(
                 "use_predictor do not apply — configure search_config instead"
             )
         if search_config is None:
-            search_config = SearchConfig(verify=verify)
+            # the default translate verify ("final") maps to the search's
+            # own default ("chosen": verify the winner once); an explicit
+            # non-default policy is honoured per variant
+            search_config = (
+                SearchConfig() if verify == "final" else SearchConfig(verify=verify)
+            )
         elif verify != "final" and verify != search_config.verify:
             raise ValueError(
                 "conflicting verify policies: pass verify through "

@@ -25,15 +25,28 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Union
 
 
-def hit_rate(hits: int, misses: int) -> float:
+def hit_rate(
+    hits: int, misses: int, default: Optional[float] = None
+) -> float:
     """The one shared hits/(hits+misses) implementation.
 
     ``SimCache.hit_rate``, ``TranslationCache.hit_rate``, and
     ``BatchTranslationReport.hit_rate`` all delegate here so the formula
-    (and its zero-traffic convention: 0.0) can never drift apart.
+    can never drift apart.  A zero-access denominator has no meaningful
+    rate: that raises an explicit :class:`ValueError` — never a bare
+    ``ZeroDivisionError`` from deep inside a report — unless the caller
+    opts into a ``default`` (display/stats paths pass ``default=0.0``;
+    decision paths should let the error surface).
     """
     total = hits + misses
-    return hits / total if total else 0.0
+    if not total:
+        if default is None:
+            raise ValueError(
+                "hit rate undefined: no cache accesses recorded "
+                "(pass default= for display paths)"
+            )
+        return default
+    return hits / total
 
 
 class Counter:

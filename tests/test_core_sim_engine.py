@@ -25,9 +25,17 @@ import os
 import pytest
 
 from repro.binary import dumps
+from repro.core import _native
 from repro.core.kernelgen import PAPER_BENCHMARKS, Profile, generate, paper_kernel
 from repro.core.simcache import SimCache, simulate_cached
-from repro.core.simulator import compile_trace, flatten_trace, simulate, simulate_reference
+from repro.core.simulator import (
+    CheckpointStore,
+    compile_trace,
+    flatten_trace,
+    simulate,
+    simulate_batch,
+    simulate_reference,
+)
 from repro.core.variants import make_variants
 
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "sim_cycles.json")
@@ -177,6 +185,146 @@ def test_simcache_bounded_eviction(all_variants):
     cache.simulate(b)   # evicts a (FIFO bound of 1)
     cache.simulate(a)   # miss again
     assert cache.hits == 0 and cache.misses == 3
+
+
+# ---------------------------------------------------------------------------
+# native engine vs Python fallback conformance
+# ---------------------------------------------------------------------------
+
+needs_native = pytest.mark.skipif(
+    not _native.available(), reason="compiled engine unavailable (no C compiler)"
+)
+
+
+@needs_native
+def test_native_engine_matches_python_engine(all_variants, monkeypatch):
+    """The compiled issue loop is state-for-state identical to the Python
+    fallback — results AND stall-attribution books, over the parity sample
+    (which includes the FP64 capacity-crawl path)."""
+    sample = list(_parity_kernels(all_variants))
+    native = [simulate(k, profile=True) for _, k in sample]
+    monkeypatch.setenv("REGDEM_SIM_NATIVE", "0")
+    fallback = [simulate(k, profile=True) for _, k in sample]
+    for (label, _), a, b in zip(sample, native, fallback):
+        assert dataclasses.asdict(a) == dataclasses.asdict(b), label
+
+
+@needs_native
+def test_native_and_python_capture_identical_checkpoints(all_variants, monkeypatch):
+    """Both engines capture checkpoints at the same trace milestones with
+    bit-identical state (clocks are IEEE-754 doubles in both)."""
+    k = all_variants["gaussian"]["regdem"].kernel
+    s_native = CheckpointStore()
+    simulate(k, profile=True, checkpoints=s_native)
+    monkeypatch.setenv("REGDEM_SIM_NATIVE", "0")
+    s_py = CheckpointStore()
+    simulate(k, profile=True, checkpoints=s_py)
+    assert len(s_native) >= 1
+    assert s_native._entries.keys() == s_py._entries.keys()
+    for key, cp in s_native._entries.items():
+        assert cp == s_py._entries[key], key[1]
+
+
+# ---------------------------------------------------------------------------
+# incremental re-simulation: checkpoint capture + resume exactness
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(params=["native", "python"])
+def engine_mode(request, monkeypatch):
+    """Run checkpoint semantics under both engines."""
+    if request.param == "native":
+        if not _native.available():
+            pytest.skip("compiled engine unavailable")
+    else:
+        monkeypatch.setenv("REGDEM_SIM_NATIVE", "0")
+    return request.param
+
+
+def test_checkpoint_resume_matches_cold_run(all_variants, engine_mode):
+    k = all_variants["gaussian"]["regdem"].kernel
+    cold = simulate(k)
+    store = CheckpointStore()
+    first = simulate(k, checkpoints=store)   # cold, captures milestones
+    assert len(store) >= 1
+    resumed = simulate(k, checkpoints=store)  # resumes from the deepest
+    assert store.hits >= 1
+    assert dataclasses.asdict(first) == dataclasses.asdict(cold)
+    assert dataclasses.asdict(resumed) == dataclasses.asdict(cold)
+    assert 0.0 < store.reuse_rate <= 1.0
+    st = store.stats()
+    assert st["entries"] == len(store) and st["hits"] == store.hits
+
+
+def test_checkpoint_resume_profiled_books_exact(all_variants, engine_mode):
+    """A resumed profiled run restores the mid-trace blame books and ends
+    with the exact stall attribution of a cold profiled run."""
+    k = all_variants["nn"]["local-shared"].kernel
+    cold = simulate(k, profile=True)
+    store = CheckpointStore()
+    simulate(k, profile=True, checkpoints=store)
+    resumed = simulate(k, profile=True, checkpoints=store)
+    assert store.hits >= 1
+    assert resumed.stall_profile.to_json() == cold.stall_profile.to_json()
+    assert resumed.total_cycles == cold.total_cycles
+
+
+def test_plain_checkpoint_never_serves_profiled_run(all_variants, engine_mode):
+    """A checkpoint without blame books cannot resume a profiled run (the
+    books would start mid-trace with holes)."""
+    k = all_variants["gaussian"]["nvcc"].kernel
+    store = CheckpointStore()
+    simulate(k, checkpoints=store)           # plain captures
+    cold = simulate(k, profile=True)
+    prof = simulate(k, profile=True, checkpoints=store)  # must not resume
+    assert prof.stall_profile.to_json() == cold.stall_profile.to_json()
+
+
+# ---------------------------------------------------------------------------
+# batched entry point (the non-property smoke; the hypothesis differential
+# lives in test_sim_batch_property.py)
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_batch_matches_per_variant(all_variants):
+    kernels = [v.kernel for v in all_variants["gaussian"].values()]
+    solo = [simulate(k, profile=True) for k in kernels]
+    batched = simulate_batch(kernels, profile=True)
+    for vn, a, b in zip(all_variants["gaussian"], solo, batched):
+        assert dataclasses.asdict(a) == dataclasses.asdict(b), vn
+
+
+def test_simulate_batch_through_simcache_dedups(all_variants):
+    k = all_variants["cfd"]["nvcc"].kernel
+    cache = SimCache()
+    res = cache.simulate_batch([k, k.copy(), k])
+    assert cache.hits >= 2  # content-duplicates served from the cache
+    assert len({r.total_cycles for r in res}) == 1
+    stats = cache.stats()
+    assert "checkpoint_entries" in stats and "checkpoint_reuse_rate" in stats
+
+
+# ---------------------------------------------------------------------------
+# trace-truncation cap is visible, never silent
+# ---------------------------------------------------------------------------
+
+
+def test_flatten_trace_truncation_is_visible():
+    k = paper_kernel("cfd")
+    k.name = "trunc_probe"
+    full = flatten_trace(k)
+    assert not full.truncated
+    cap = len(full) // 2
+    with pytest.warns(RuntimeWarning, match="truncated prefix"):
+        t = flatten_trace(k, max_len=cap)
+    assert t.truncated and len(t) == cap
+    # the warning fires once per kernel; the truncated flag every time
+    import warnings as _warnings
+
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        t2 = flatten_trace(k, max_len=cap)
+    assert t2.truncated
 
 
 # ---------------------------------------------------------------------------

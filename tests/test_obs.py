@@ -199,9 +199,13 @@ def test_registry_export_merge_roundtrip():
 
 
 def test_hit_rate_convention():
-    assert hit_rate(0, 0) == 0.0
     assert hit_rate(3, 1) == 0.75
     assert hit_rate(0, 5) == 0.0
+    # zero traffic has no meaningful rate: explicit error unless the caller
+    # (a display/stats path) opts into a default
+    with pytest.raises(ValueError, match="no cache accesses"):
+        hit_rate(0, 0)
+    assert hit_rate(0, 0, default=0.0) == 0.0
 
 
 # ---------------------------------------------------------------------------
