@@ -1,36 +1,13 @@
-"""Shared benchmark-harness helpers."""
+"""Shared benchmark-harness helpers.
+
+``write_json_atomic`` used to live here; the implementation is now the
+repo-wide :mod:`repro.util` (the artifact store and the harness must share
+one atomic-write recipe), re-exported under the historical name so every
+``BENCH_*.json`` writer keeps working unchanged.
+"""
 
 from __future__ import annotations
 
-import json
-import os
-import tempfile
+from repro.util import write_bytes_atomic, write_json_atomic
 
-
-def write_json_atomic(path: str, obj: object) -> None:
-    """Write a ``BENCH_*.json`` report atomically.
-
-    The report is first written to a temporary file in the same directory
-    and then renamed over the target, so an interrupted run (ctrl-C, OOM,
-    CI timeout) can never leave a truncated baseline behind for the CI
-    perf-trend gate to trip over.  ``os.replace`` is atomic on POSIX and
-    Windows when source and destination share a filesystem — which the
-    same-directory temp file guarantees.
-    """
-    path = os.path.abspath(path)
-    directory = os.path.dirname(path)
-    fd, tmp = tempfile.mkstemp(
-        dir=directory, prefix=os.path.basename(path) + ".", suffix=".tmp"
-    )
-    try:
-        with os.fdopen(fd, "w") as fh:
-            json.dump(obj, fh, indent=2, sort_keys=True)
-            fh.write("\n")
-        os.replace(tmp, path)
-    except BaseException:
-        # never leave the temp file behind on a failed/interrupted write
-        try:
-            os.unlink(tmp)
-        except OSError:
-            pass
-        raise
+__all__ = ["write_bytes_atomic", "write_json_atomic"]

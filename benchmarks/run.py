@@ -20,6 +20,8 @@ Sections:
                 over all 9 benchmarks x every arch    (writes BENCH_search.json)
   obs           telemetry overhead (enabled vs disabled) + span throughput
                 (writes BENCH_obs.json)
+  serve         translation-daemon latency, warm-restart hit rate, and the
+                serving invariant under a fault storm (writes BENCH_serve.json)
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 Some sections: ``... -m benchmarks.run --only fig6,fig7`` (comma-separated
@@ -43,7 +45,7 @@ def main() -> None:
         metavar="SECTION[,SECTION...]",
         help="run only these sections (comma-separated, repeatable): "
              "table1|fig6|fig7|fig8|fig9|roofline|tpu_selector|binary|"
-             "pipeline|sim|arch|search|obs",
+             "pipeline|sim|arch|search|obs|serve",
     )
     ap.add_argument("--binary-json", default=None, metavar="PATH",
                     help="where the binary section writes its JSON report "
@@ -66,6 +68,9 @@ def main() -> None:
     ap.add_argument("--obs-json", default=None, metavar="PATH",
                     help="where the obs section writes its JSON report "
                          "(default: BENCH_obs.json in the cwd)")
+    ap.add_argument("--serve-json", default=None, metavar="PATH",
+                    help="where the serve section writes its JSON report "
+                         "(default: BENCH_serve.json in the cwd)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record telemetry for the whole run and write a "
                          "Chrome trace (.json) or JSONL event log (.jsonl)")
@@ -79,6 +84,7 @@ def main() -> None:
         pipeline_bench,
         roofline,
         search_bench,
+        serve_bench,
         sim_bench,
         tpu_selector,
     )
@@ -104,6 +110,9 @@ def main() -> None:
     def obs_rows():
         return obs_bench.obs_rows(args.obs_json or obs_bench.JSON_PATH)
 
+    def serve_rows():
+        return serve_bench.serve_rows(args.serve_json or serve_bench.JSON_PATH)
+
     sections = {
         "table1": paper_figs.table1_occupancy,
         "fig6": paper_figs.fig6_speedups,
@@ -118,6 +127,7 @@ def main() -> None:
         "arch": arch_rows,
         "search": search_rows,
         "obs": obs_rows,
+        "serve": serve_rows,
     }
 
     selected = None

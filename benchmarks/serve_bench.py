@@ -1,0 +1,178 @@
+"""Serving benchmarks: daemon latency, warm-restart hit rate, fault behaviour.
+
+Three phases against :class:`repro.runtime.TranslationDaemon`, writing
+``BENCH_serve.json`` for the CI trend gate:
+
+* **cold / serve** — first-contact and steady-state request latency
+  (p50/p99 ms) plus warm requests/s through the full daemon path (queue,
+  slots, watchdog, cache).  The warm throughput is the gated headline; the
+  latency percentiles ship for inspection but are not gated (absolute
+  wall-clock numbers on shared CI machines are too noisy for a relative
+  gate — the ``BENCH_obs`` precedent).
+* **warm** — a *restarted* daemon over the same artifact-store directory:
+  the fraction of requests served from disk with zero pipeline passes
+  (``hit_rate``, gated; anything under 1.0 means restart durability broke).
+* **faults** — a deterministic fault storm (transient errors + store bit
+  flips): ``degraded_ok_rate`` is the fraction of responses that are
+  byte-identical to the fault-free output *or* correctly-flagged degraded
+  baselines (gated; under 1.0 means the serving invariant broke — wrong
+  bytes or an unflagged failure), alongside the observed degradation rate.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from typing import Iterator, List, Optional
+
+from repro.binary import dumps, loads_many
+from repro.binary.roundtrip import verified_dumps_many
+from repro.core.artifacts import ArtifactStore
+from repro.core.kernelgen import paper_kernel
+from repro.core.passes import PIPELINE_COUNTERS
+from repro.core.search import SearchConfig
+from repro.core.translator import TranslationService
+from repro.runtime import DaemonConfig, TranslationDaemon
+from repro.testing import FaultPlan
+from repro.testing import injected as faults_injected
+
+from ._util import write_json_atomic
+
+#: Default location of the machine-readable report (cwd-relative).
+JSON_PATH = "BENCH_serve.json"
+
+#: translate-mode workload kernels (Table-1 subset)
+BATCH_NAMES = ["md5hash", "conv", "nn"]
+#: tune-mode workload (kept small: the bench measures serving, not search)
+TUNE_CONFIG = SearchConfig(max_targets=1, beam_width=2, top_k=1)
+#: steady-state repetitions per request kind
+WARM_REPS = 20
+#: fault-storm request count
+FAULT_REQS = 8
+
+
+def _percentiles(lat_ms: List[float]) -> dict:
+    ordered = sorted(lat_ms)
+
+    def pct(p: float) -> float:
+        rank = min(len(ordered) - 1, int(round(p / 100.0 * (len(ordered) - 1))))
+        return round(ordered[rank], 3)
+
+    return {"p50_ms": pct(50), "p99_ms": pct(99)}
+
+
+def _drive(daemon: TranslationDaemon, requests) -> List[float]:
+    """Run ``(data, mode)`` requests; return per-request latency in ms."""
+    lat = []
+    for data, mode in requests:
+        t0 = time.perf_counter()
+        resp = daemon.request(
+            data, mode=mode, config=TUNE_CONFIG if mode == "tune" else None
+        )
+        lat.append((time.perf_counter() - t0) * 1e3)
+        assert resp.ok, f"bench request failed: {resp.status} {resp.reason}"
+    return lat
+
+
+def serve_rows(json_path: Optional[str] = JSON_PATH) -> Iterator[str]:
+    """Yield CSV rows; write ``BENCH_serve.json`` as a side effect."""
+    blobs = [dumps(paper_kernel(n)) for n in BATCH_NAMES]
+    tune_blob = blobs[0]
+    requests = [(b, "translate") for b in blobs] + [(tune_blob, "tune")]
+
+    store_root = tempfile.mkdtemp(prefix="regdem_serve_bench_")
+    try:
+        # -- cold + steady-state through one daemon ---------------------------
+        with TranslationDaemon(store=ArtifactStore(store_root)) as daemon:
+            cold_lat = _drive(daemon, requests)
+            t0 = time.perf_counter()
+            warm_lat: List[float] = []
+            for _ in range(WARM_REPS):
+                warm_lat.extend(_drive(daemon, requests))
+            warm_wall = time.perf_counter() - t0
+            n_warm = WARM_REPS * len(requests)
+            requests_per_s = n_warm / warm_wall if warm_wall else 0.0
+
+        # -- warm restart: fresh process state, same store dir ----------------
+        svc = TranslationService(store=ArtifactStore(store_root))
+        with TranslationDaemon(service=svc) as daemon2:
+            passes0 = PIPELINE_COUNTERS["passes"]
+            restart_lat = _drive(daemon2, requests)
+            zero_passes = PIPELINE_COUNTERS["passes"] == passes0
+        disk_hits = svc.cache.disk_hits
+        warm_hit_rate = disk_hits / len(requests) if zero_passes else 0.0
+
+        # -- fault storm -------------------------------------------------------
+        expected, _ = TranslationService().translate(blobs[0])
+        baseline = verified_dumps_many(loads_many(blobs[0]))
+        # probabilistic transient errors plus three scheduled
+        # fail-every-attempt requests, so the report always exercises both
+        # the retry-recovery path and the degradation path
+        plan = FaultPlan(
+            seed=5,
+            error_p=0.4,
+            bit_flip_p=0.3,
+            schedule={("daemon.error", str(rid)): 3 for rid in (2, 5, 7)},
+        )
+        ok = degraded = invariant_ok = 0
+        with faults_injected(plan):
+            cfg = DaemonConfig(deadline_s=10.0, backoff_s=0.001)
+            with TranslationDaemon(config=cfg) as daemon3:
+                handles = [daemon3.submit(blobs[0]) for _ in range(FAULT_REQS)]
+                for h in handles:
+                    resp = h.result(timeout=60)
+                    if resp.ok and resp.payload == expected:
+                        ok += 1
+                        invariant_ok += 1
+                    elif resp.degraded and resp.payload == baseline:
+                        degraded += 1
+                        invariant_ok += 1
+    finally:
+        shutil.rmtree(store_root, ignore_errors=True)
+
+    report = {
+        "serve": {
+            "requests": n_warm,
+            "requests_per_s": round(requests_per_s, 3),
+            **_percentiles(warm_lat),
+        },
+        "cold": {"requests": len(cold_lat), **_percentiles(cold_lat)},
+        "warm": {
+            "requests": len(requests),
+            "disk_hits": disk_hits,
+            "zero_passes": zero_passes,
+            "hit_rate": round(warm_hit_rate, 3),
+            **_percentiles(restart_lat),
+        },
+        "faults": {
+            "requests": FAULT_REQS,
+            "ok": ok,
+            "degraded": degraded,
+            "degradation_rate": round(degraded / FAULT_REQS, 3),
+            "degraded_ok_rate": round(invariant_ok / FAULT_REQS, 3),
+        },
+    }
+    if json_path:
+        write_json_atomic(json_path, report)
+
+    c = report["cold"]
+    s = report["serve"]
+    w = report["warm"]
+    f = report["faults"]
+    yield f"serve_cold_p99,{c['p99_ms'] * 1e3:.0f},ms={c['p99_ms']}"
+    yield f"serve_warm_p50,{s['p50_ms'] * 1e3:.0f},ms={s['p50_ms']}"
+    yield f"serve_warm_p99,{s['p99_ms'] * 1e3:.0f},ms={s['p99_ms']}"
+    yield (
+        f"serve_throughput,{1e6 / s['requests_per_s']:.0f},"
+        f"requests_per_s={s['requests_per_s']}"
+    )
+    yield (
+        f"serve_restart_hit_rate,{w['p50_ms'] * 1e3:.0f},"
+        f"hit_rate={w['hit_rate']}"
+    )
+    yield (
+        f"serve_fault_invariant,{f['degraded_ok_rate'] * 100:.0f},"
+        f"degraded_ok_rate={f['degraded_ok_rate']}"
+        f";degradation_rate={f['degradation_rate']}"
+    )

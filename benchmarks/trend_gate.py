@@ -49,6 +49,12 @@ METRICS: List[Tuple[str, Tuple[str, ...], str]] = [
     # overhead percentages are too noisy for a relative gate; the span
     # recording throughput is the stable telemetry headline
     ("BENCH_obs.json", ("events", "events_per_s"), "higher"),
+    # serving: p50/p99 latencies ship in the report but are not gated
+    # (absolute wall-clock on shared CI is too noisy); the gated headlines
+    # are warm throughput and the two deterministic correctness rates
+    ("BENCH_serve.json", ("serve", "requests_per_s"), "higher"),
+    ("BENCH_serve.json", ("warm", "hit_rate"), "higher"),
+    ("BENCH_serve.json", ("faults", "degraded_ok_rate"), "higher"),
 ]
 
 DEFAULT_TOLERANCE = 0.30

@@ -198,7 +198,12 @@ class _StrTab:
         end = blob.find(b"\x00", off)
         if end == -1:
             raise ContainerError(f"unterminated string at strtab offset {off}")
-        return blob[off:end].decode("utf-8")
+        try:
+            return blob[off:end].decode("utf-8")
+        except UnicodeDecodeError as exc:
+            raise ContainerError(
+                f"corrupt string at strtab offset {off}: {exc}"
+            ) from None
 
 
 def dumps(
@@ -433,9 +438,21 @@ def loads_many(data: bytes) -> List[Kernel]:
                     f"(stored {stored_crc:#010x}, recomputed {recomputed:#010x})"
                 )
 
-        items = encoding.decode_text(
-            sections[text_sec][2], n_instrs, labels, tags, codec=arch.codec
-        )
+        # decode failures on corrupt-but-checksum-consistent bytes (or v1
+        # containers, which have no per-kernel CRC) must surface as the
+        # container's own error type, never a raw struct/IndexError
+        # traceback from deep inside the codec
+        try:
+            items = encoding.decode_text(
+                sections[text_sec][2], n_instrs, labels, tags, codec=arch.codec
+            )
+        except ContainerError:
+            raise
+        except (encoding.EncodingError, struct.error, IndexError, KeyError,
+                ValueError, UnicodeDecodeError) as exc:
+            raise ContainerError(
+                f"kernel {name}: corrupt text section: {exc}"
+            ) from None
         kernel = Kernel(
             name=name,
             items=items,

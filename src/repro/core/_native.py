@@ -22,6 +22,7 @@ import hashlib
 import os
 import subprocess
 import tempfile
+import warnings
 from typing import List, Optional
 
 import numpy as np
@@ -38,6 +39,27 @@ _SOURCE = os.path.join(os.path.dirname(__file__), "_sim_engine.c")
 
 _fn = None
 _failed = False
+_warned = False
+
+
+def _warn_fallback(exc: Exception) -> None:
+    """The compile failed: say so **once** and count it, instead of
+    silently serving ~20x lower simulator throughput.  In production the
+    ``simulator.native_unavailable`` counter is the diagnosable signal
+    (warnings scroll away; ``metrics_snapshot()`` does not)."""
+    global _warned
+    if obs.enabled():
+        obs.metrics().counter("simulator.native_unavailable").inc()
+    if not _warned:
+        _warned = True
+        warnings.warn(
+            f"native simulator engine unavailable ({exc!r}); falling back "
+            "to the pure-Python issue loop (~20x slower; results are "
+            "identical). Set CC to a working C compiler, or set "
+            "REGDEM_SIM_NATIVE=0 to silence this warning.",
+            RuntimeWarning,
+            stacklevel=4,
+        )
 
 
 def _cache_dir() -> str:
@@ -91,10 +113,9 @@ def engine():
     if _fn is None:
         try:
             _fn = _compile()
-        except Exception:
+        except Exception as exc:
             _failed = True
-            if obs.enabled():
-                obs.metrics().counter("simulator.native_unavailable").inc()
+            _warn_fallback(exc)
             return None
     return _run
 

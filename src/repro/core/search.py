@@ -46,9 +46,8 @@ pruning error).
 
 from __future__ import annotations
 
-import multiprocessing
+import copy
 import os
-import random
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -62,6 +61,7 @@ from .passes import RegDemOptions
 from .predictor import achieved_occupancy, f_occupancy, ranking_agreement
 from .regdem import auto_targets, demote
 from .simcache import DEFAULT_SIM_CACHE, SimCache
+from .workerpool import Quarantined, WorkerCrashError, supervised_map
 
 #: Relative simulated-cycle slack the beam search is allowed vs exhaustive
 #: ground truth (pinned by the differential tests).
@@ -209,8 +209,16 @@ class SearchReport:
     #: so profiled reports stay byte-identical across repeat runs)
     stall_profiles: Dict[str, StallProfile] = field(default_factory=dict)
     seconds: float = 0.0
+    #: raw :meth:`to_json` dict stashed by :meth:`from_json`.  A report
+    #: warm-loaded from the artifact store does not reconstruct
+    #: ``stall_profiles`` as objects, yet its container ``.note`` sections
+    #: must stay byte-identical to the original — so re-serialization
+    #: returns the stash verbatim.
+    _raw: Optional[dict] = field(default=None, repr=False, compare=False)
 
     def to_json(self) -> dict:
+        if self._raw is not None:
+            return copy.deepcopy(self._raw)
         return {
             "kernel": self.kernel_name,
             "input_arch": self.input_arch,
@@ -231,6 +239,33 @@ class SearchReport:
             "variants": [v.to_json() for v in self.variants],
         }
 
+    @classmethod
+    def from_json(cls, data: dict) -> "SearchReport":
+        """Rebuild a report from its :meth:`to_json` dict (disk warm-load).
+
+        Variants round-trip exactly (``to_json`` keys are the field names);
+        stall profiles stay raw-JSON-only — :meth:`to_json` returns the
+        stashed original, so a warm-loaded container re-serializes
+        byte-identically."""
+        rep = cls(
+            kernel_name=data["kernel"],
+            input_arch=data["input_arch"],
+            chosen=data["chosen"],
+            predictor_choice=data["predictor_choice"],
+            baseline=data["baseline"],
+            space_size=data["space_size"],
+            explored=data["explored"],
+            simulated=data["simulated"],
+            beam=list(data.get("beam", [])),
+            agreement=data.get("agreement", 1.0),
+            variants=[ScoredVariant(**v) for v in data.get("variants", [])],
+            cycles={k: int(v) for k, v in data.get("cycles", {}).items()},
+            speedup=data.get("speedup", 1.0),
+            per_arch=dict(data.get("per_arch", {})),
+        )
+        rep._raw = copy.deepcopy(data)
+        return rep
+
 
 @dataclass
 class SearchOutcome:
@@ -238,6 +273,11 @@ class SearchOutcome:
 
     kernel: Kernel
     report: SearchReport
+    #: variant labels dropped because their pool task repeatedly crashed
+    #: its worker (see :mod:`repro.core.workerpool`).  Non-empty means the
+    #: outcome is *not* the fault-free search result — the translation
+    #: service refuses to cache or serve it (the daemon degrades instead).
+    quarantined: List[str] = field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -321,14 +361,6 @@ def _expand_one(payload: tuple) -> tuple:
     )
 
 
-def _seed_worker(seed: int) -> None:
-    """Pool-worker initializer: seed the process RNG once.  The search
-    tasks are deterministic and never draw from it — this is hygiene for
-    anything else the worker might import — and it runs only in child
-    processes, so the caller's in-process ``random`` state is untouched."""
-    random.seed(seed)
-
-
 def _simulate_one(payload: tuple) -> tuple:
     """Simulate (and optionally stall-profile) one confirmed variant;
     returns ``(index, SimResult, cache_export, obs_export)`` — the profile
@@ -353,19 +385,15 @@ def _pool_map(fn, payloads: Sequence[tuple], workers: int, seed: int = 0) -> lis
     same task functions, so pool size can never change a result — only
     completion time.  Results come back in submission order regardless of
     which worker finished first.
+
+    The pool is **supervised** (:func:`repro.core.workerpool.
+    supervised_map`): a crashed worker is restarted and its task retried;
+    a task that repeatedly kills its worker comes back as a
+    :class:`~repro.core.workerpool.Quarantined` marker instead of hanging
+    or failing the whole search — the stage loops drop that variant and
+    record it in :attr:`SearchOutcome.quarantined`.
     """
-    if workers <= 1 or len(payloads) <= 1:
-        return [fn(p) for p in payloads]
-    try:
-        ctx = multiprocessing.get_context("fork")
-    except ValueError:  # pragma: no cover - non-POSIX fallback
-        ctx = multiprocessing.get_context("spawn")
-    with ctx.Pool(
-        processes=min(workers, len(payloads)),
-        initializer=_seed_worker,
-        initargs=(seed,),
-    ) as pool:
-        return pool.map(fn, payloads, chunksize=1)
+    return supervised_map(fn, payloads, workers, seed=seed)
 
 
 # ---------------------------------------------------------------------------
@@ -504,9 +532,21 @@ def _search_impl(
     #: all verification to the single post-selection winner check)
     pipeline_verify = "none" if config.verify == "chosen" else config.verify
 
+    #: variant labels dropped because their pool task repeatedly crashed
+    #: its worker — reported on the outcome so callers can refuse to treat
+    #: a narrowed search as the fault-free result
+    quarantined_labels: List[str] = []
+
+    def quarantine(label: str) -> None:
+        quarantined_labels.append(label)
+        if obs.enabled():
+            obs.metrics().counter("search.quarantined").inc()
+
     def run_stage(stage_specs, stage_name):
         in_process = config.workers <= 1 or len(stage_specs) <= 1
-        rows = []  # (kernel, regs, demoted_words, occupancy, stalls)
+        # (kernel, regs, demoted_words, occupancy, stalls) — or None for a
+        # spec whose pool task was quarantined
+        rows = []
         with obs.span(f"search.{stage_name}", variants=len(stage_specs)):
             if in_process:
                 # the pool task's exact work minus its container round-trips,
@@ -528,13 +568,15 @@ def _search_impl(
                 results = _pool_map(
                     _expand_one, payloads, config.workers, config.seed
                 )
-                for (_, blob, regs, words, occ, stalls, export, obs_export) in results:
+                for item in results:
+                    if isinstance(item, Quarantined):
+                        rows.append(None)
+                        continue
+                    (_, blob, regs, words, occ, stalls, export, obs_export) = item
                     cache.merge(export)
                     _adopt_obs(obs_export)
                     rows.append((container.loads(blob), regs, words, occ, stalls))
-        for (arch, tgt, strat, flags), (k_out, regs, words, occ, stalls) in zip(
-            stage_specs, rows
-        ):
+        for (arch, tgt, strat, flags), row in zip(stage_specs, rows):
             opts_label = RegDemOptions(
                 candidate_strategy=strat,
                 bank_avoid=flags[0],
@@ -543,6 +585,10 @@ def _search_impl(
                 substitute=flags[3],
             ).label()
             label = f"{arch}/regdem@{tgt}:{opts_label}"
+            if row is None:
+                quarantine(label)
+                continue
+            k_out, regs, words, occ, stalls = row
             scored[label] = ScoredVariant(
                 label=label,
                 arch=arch,
@@ -665,12 +711,29 @@ def _search_impl(
             sim_results = _pool_map(
                 _simulate_one, pending, config.workers, config.seed
             )
-            for lb, (_, res, export, obs_export) in zip(
-                pending_labels, sim_results
-            ):
+            for lb, item in zip(pending_labels, sim_results):
+                if isinstance(item, Quarantined):
+                    quarantine(lb)
+                    continue
+                (_, res, export, obs_export) = item
                 cache.merge(export)
                 _adopt_obs(obs_export)
                 cycles[lb] = res.total_cycles
+    if quarantined_labels:
+        # a quarantined confirm task left its label without cycles; a
+        # variant whose arch baseline itself vanished has nothing
+        # comparable to rank against (cross-arch cycle counts are
+        # different units) and is dropped with it
+        confirm = [
+            lb
+            for lb in confirm
+            if lb in cycles and f"{scored[lb].arch}/nvcc" in cycles
+        ]
+        if own_baseline not in confirm:
+            raise WorkerCrashError(
+                f"search cannot rank anything: the input-arch baseline "
+                f"{own_baseline!r} was quarantined"
+            )
     for label in confirm:
         scored[label].cycles = cycles[label]
 
@@ -722,7 +785,11 @@ def _search_impl(
     if config.verify == "chosen" and scored[chosen].stage in ("beam", "expand"):
         _verify_winner(bases[scored[chosen].arch], winner, chosen)
     # never hand back an alias of the caller's kernel or an anchor
-    return SearchOutcome(kernel=winner.copy(), report=report)
+    return SearchOutcome(
+        kernel=winner.copy(),
+        report=report,
+        quarantined=sorted(quarantined_labels),
+    )
 
 
 def _verify_winner(base: Kernel, winner: Kernel, label: str) -> None:

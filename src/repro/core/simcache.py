@@ -25,6 +25,7 @@ the *same kernels* over and over (fig6's nvcc baselines are fig9's, fig7's
 from __future__ import annotations
 
 import dataclasses
+import pickle
 from typing import Dict, Optional, Tuple
 
 from repro import obs
@@ -59,10 +60,23 @@ class SimCache:
     ``max_entries`` bounds each table FIFO-style (insertion order), matching
     :class:`repro.core.translator.TranslationCache`; ``None`` is unbounded
     (the benchmark harness working set is small and enumerable).
+
+    ``store`` (an :class:`~repro.core.artifacts.ArtifactStore`) makes the
+    ``sims`` and ``stalls`` tables restart-durable: every put spills a
+    pickled ``(render, value)`` pair to disk, and a memory miss warm-loads
+    from the store before falling through to a real (re-)simulation.
+    Profiles and checkpoints stay memory-only — profiles re-derive from one
+    profiled run, and checkpoints are bulky mid-trace engine states.
     """
 
-    def __init__(self, max_entries: Optional[int] = None):
+    def __init__(
+        self,
+        max_entries: Optional[int] = None,
+        store: Optional[object] = None,
+    ):
         self.max_entries = max_entries
+        self.store = store
+        self.disk_hits = 0
         #: (crc, sm, max_cycles) -> (render, SimResult)
         self._sims: Dict[tuple, Tuple[str, SimResult]] = {}
         #: (crc, occupancy) -> (render, stalls)
@@ -88,9 +102,10 @@ class SimCache:
         return _hit_rate(self.hits, self.misses)
 
     def stats(self) -> Dict[str, float]:
-        return {
+        out = {
             "hits": self.hits,
             "misses": self.misses,
+            "disk_hits": self.disk_hits,
             "evictions": self.evictions,
             "capacity": self.max_entries,
             "hit_rate": round(_hit_rate(self.hits, self.misses, default=0.0), 3),
@@ -100,6 +115,11 @@ class SimCache:
             "checkpoint_entries": len(self.checkpoints),
             "checkpoint_reuse_rate": round(self.checkpoints.reuse_rate, 3),
         }
+        if self.store is not None:
+            out["disk_hit_rate"] = round(
+                _hit_rate(self.disk_hits, self.misses, default=0.0), 3
+            )
+        return out
 
     def clear(self) -> None:
         self._sims.clear()
@@ -108,6 +128,7 @@ class SimCache:
         self.checkpoints.clear()
         self.hits = 0
         self.misses = 0
+        self.disk_hits = 0
         self.evictions = 0
 
     # -- keying ---------------------------------------------------------------
@@ -123,25 +144,77 @@ class SimCache:
             crc = kernel_crc(kernel)
         return crc
 
-    def _get(self, table: dict, key: tuple, render: str):
+    #: tables that spill to / warm-load from the artifact store
+    _DURABLE_TABLES = ("sims", "stalls")
+
+    @staticmethod
+    def _store_key(table_name: str, key: tuple) -> str:
+        return f"simcache:{table_name}:{key!r}"
+
+    def _disk_get(self, table_name: str, key: tuple, render: str):
+        """Warm-load one entry from the artifact store, or ``None``.
+
+        The store already CRC-verifies the payload; the unpickle guard and
+        the render comparison protect against a key collision or a payload
+        written by an incompatible version — either is a miss, never a
+        wrong value."""
+        entry = self.store.get(self._store_key(table_name, key))
+        if entry is None:
+            return None
+        payload, _meta = entry
+        try:
+            stored_render, value = pickle.loads(payload)
+        except Exception:
+            return None
+        if stored_render != render:
+            return None
+        return value
+
+    def _get(self, table: dict, key: tuple, render: str, table_name: str = ""):
         entry = table.get(key)
         if entry is not None and entry[0] == render:
             self.hits += 1
             if obs.enabled():
                 obs.metrics().counter("simcache.hits").inc()
             return entry[1]
+        if self.store is not None and table_name in self._DURABLE_TABLES:
+            value = self._disk_get(table_name, key, render)
+            if value is not None:
+                # repopulate memory without re-spilling what disk just served
+                self._mem_put(table, key, render, value)
+                self.hits += 1
+                self.disk_hits += 1
+                if obs.enabled():
+                    obs.metrics().counter("simcache.hits").inc()
+                    obs.metrics().counter("simcache.disk_hits").inc()
+                return value
         self.misses += 1
         if obs.enabled():
             obs.metrics().counter("simcache.misses").inc()
         return None
 
-    def _put(self, table: dict, key: tuple, render: str, value) -> None:
+    def _mem_put(self, table: dict, key: tuple, render: str, value) -> None:
         if self.max_entries is not None and len(table) >= self.max_entries:
             table.pop(next(iter(table)))
             self.evictions += 1
             if obs.enabled():
                 obs.metrics().counter("simcache.evictions").inc()
         table[key] = (render, value)
+
+    def _put(
+        self, table: dict, key: tuple, render: str, value, table_name: str = ""
+    ) -> None:
+        self._mem_put(table, key, render, value)
+        if self.store is not None and table_name in self._DURABLE_TABLES:
+            try:
+                payload = pickle.dumps((render, value), protocol=4)
+            except Exception:
+                return  # unpicklable value: memory-only, never fatal
+            self.store.put(
+                self._store_key(table_name, key),
+                payload,
+                meta={"table": table_name},
+            )
 
     # -- cached operations ----------------------------------------------------
 
@@ -167,11 +240,11 @@ class SimCache:
             sm = arch_of(kernel).sm
         key = (self.content_key(kernel), sm, max_cycles)
         render = _guard(kernel)
-        hit = self._get(self._sims, key, render)
+        hit = self._get(self._sims, key, render, "sims")
         if hit is not None:
             return dataclasses.replace(hit)
         res = simulate(kernel, sm, max_cycles, checkpoints=self.checkpoints)
-        self._put(self._sims, key, render, res)
+        self._put(self._sims, key, render, res, "sims")
         return dataclasses.replace(res)
 
     def peek_simulate(
@@ -213,17 +286,21 @@ class SimCache:
             sm = arch_of(kernel).sm
         key = (self.content_key(kernel), sm, max_cycles)
         render = _guard(kernel)
-        hit = self._get(self._profiles, key, render)
+        hit = self._get(self._profiles, key, render, "profiles")
         if hit is not None:
             return hit
         res = simulate(
             kernel, sm, max_cycles, profile=True, checkpoints=self.checkpoints
         )
         prof = res.stall_profile
-        self._put(self._profiles, key, render, prof)
+        self._put(self._profiles, key, render, prof, "profiles")
         if key not in self._sims:
             self._put(
-                self._sims, key, render, dataclasses.replace(res, stall_profile=None)
+                self._sims,
+                key,
+                render,
+                dataclasses.replace(res, stall_profile=None),
+                "sims",
             )
         return prof
 
@@ -256,13 +333,13 @@ class SimCache:
         """
         key = (self.content_key(kernel), occupancy)
         render = _guard(kernel)
-        hit = self._get(self._stalls, key, render)
+        hit = self._get(self._stalls, key, render, "stalls")
         if hit is not None:
             return hit
         from .predictor import estimate_stalls
 
         val = estimate_stalls(kernel, occupancy)
-        self._put(self._stalls, key, render, val)
+        self._put(self._stalls, key, render, val, "stalls")
         return val
 
     # -- pool-worker cache exchange -------------------------------------------
@@ -288,14 +365,15 @@ class SimCache:
         not depend on worker completion order).  Returns the number of
         entries added."""
         added = 0
-        for table, incoming in (
-            (self._sims, exported.get("sims", {})),
-            (self._stalls, exported.get("stalls", {})),
-            (self._profiles, exported.get("profiles", {})),
+        for name, table, incoming in (
+            ("sims", self._sims, exported.get("sims", {})),
+            ("stalls", self._stalls, exported.get("stalls", {})),
+            ("profiles", self._profiles, exported.get("profiles", {})),
         ):
             for key in sorted(incoming, key=repr):
                 if key not in table:
-                    self._put(table, key, *incoming[key])
+                    render, value = incoming[key]
+                    self._put(table, key, render, value, name)
                     added += 1
         return added
 

@@ -59,6 +59,16 @@ class TranslationError(RuntimeError):
     """Raised when a transformed binary fails self-checks."""
 
 
+class DegradedSearchError(TranslationError):
+    """An autotuning search completed only by quarantining crashed tasks.
+
+    The reduced-space winner is verified-correct, but it is **not** the
+    fault-free search result, so the strict service layer refuses to cache
+    or serve it silently.  The translation daemon catches this and applies
+    its degradation policy (retry, then serve the nvcc baseline flagged
+    ``degraded``)."""
+
+
 @dataclass
 class TranslationReport:
     kernel_name: str
@@ -223,14 +233,29 @@ class TranslationCache:
     translation, plus the original :class:`TranslationReport`.  The report
     object is **shared** between the original miss and every later hit:
     treat it as read-only.  No pipeline pass runs on a hit.
+
+    With a persistent ``store`` (:class:`~repro.core.artifacts.
+    ArtifactStore`), finished translations **spill to disk** and survive
+    process restarts: an in-memory miss falls through to the store, and a
+    verified disk entry — chosen-kernel container bytes plus a summary
+    report, input-render collision guard intact — is warm-loaded with zero
+    pipeline passes run, byte-identical to the original translation, and
+    counted in :attr:`disk_hits`.  Warm-loaded reports are **summaries**:
+    ``results``/``pass_stats`` are empty (the per-variant kernels were
+    never persisted), but ``chosen``/``considered``/``predictions`` and a
+    tune's :attr:`TranslationReport.search` (with byte-stable ``to_json``)
+    are intact — everything the serving path reads.
     """
 
-    def __init__(self, max_entries: Optional[int] = None):
+    def __init__(self, max_entries: Optional[int] = None, store=None):
         self._entries: Dict[tuple, Tuple[str, Kernel, TranslationReport]] = {}
         self.max_entries = max_entries
+        #: optional repro.core.artifacts.ArtifactStore persistence tier
+        self.store = store
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.disk_hits = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -242,14 +267,18 @@ class TranslationCache:
         return _hit_rate(self.hits, self.misses)
 
     def stats(self) -> Dict[str, float]:
-        return {
+        out = {
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
             "capacity": self.max_entries,
             "entries": len(self._entries),
             "hit_rate": round(_hit_rate(self.hits, self.misses, default=0.0), 3),
+            "disk_hits": self.disk_hits,
         }
+        if self.store is not None:
+            out["disk_hit_rate"] = self.store.stats()["hit_rate"]
+        return out
 
     @staticmethod
     def content_crc(kernel: Kernel) -> int:
@@ -280,6 +309,69 @@ class TranslationCache:
         worker is a hit for a later N-worker call (and vice versa)."""
         return (TranslationCache.content_crc(kernel), "tune", config.signature())
 
+    @staticmethod
+    def _store_key(key: tuple) -> str:
+        """Stable string address of one cache key for the artifact store
+        (the tuples hold only ints/strings/bools/None, whose ``repr`` is
+        deterministic across processes)."""
+        return f"translation:{key!r}"
+
+    @staticmethod
+    def _report_to_json(report: TranslationReport) -> dict:
+        """The persistable summary of a report (per-variant kernels and
+        pass stats are deliberately not spilled — only what serving reads)."""
+        return {
+            "kernel_name": report.kernel_name,
+            "baseline_regs": report.baseline_regs,
+            "chosen": report.chosen,
+            "considered": list(report.considered),
+            "predictions": dict(report.predictions),
+            "search": None if report.search is None else report.search.to_json(),
+        }
+
+    @staticmethod
+    def _report_from_json(data: dict) -> TranslationReport:
+        search = None
+        if data.get("search") is not None:
+            search = SearchReport.from_json(data["search"])
+        return TranslationReport(
+            kernel_name=data["kernel_name"],
+            baseline_regs=data["baseline_regs"],
+            chosen=data["chosen"],
+            considered=list(data["considered"]),
+            predictions=dict(data["predictions"]),
+            search=search,
+        )
+
+    def _disk_get(
+        self, key: tuple, kernel: Kernel
+    ) -> Optional[Tuple[Kernel, TranslationReport]]:
+        """Warm-load one entry from the persistent store (in-memory miss
+        path).  Every byte served was CRC-verified by the store this call;
+        the input-render guard and a full container decode re-verify the
+        translation-level invariants on top.  A verified load also
+        repopulates the in-memory table, so the next hit is memory-speed."""
+        entry = self.store.get(self._store_key(key))
+        if entry is None:
+            return None
+        payload, meta = entry
+        if meta.get("input_render") != kernel.render():
+            return None  # CRC collision or stale schema: recompute
+        try:
+            from repro.binary import container
+
+            chosen = container.loads(payload)
+            report = self._report_from_json(meta["report"])
+        except Exception:
+            # an entry the store verified but this code version cannot
+            # decode (e.g. written by a newer schema) is a miss, not a crash
+            return None
+        self._entries[key] = (meta["input_render"], chosen.copy(), report)
+        self.disk_hits += 1
+        if obs.enabled():
+            obs.metrics().counter("translation_cache.disk_hits").inc()
+        return chosen.copy(), report
+
     def get(self, key: tuple, kernel: Kernel) -> Optional[Tuple[Kernel, TranslationReport]]:
         entry = self._entries.get(key)
         if entry is not None:
@@ -289,6 +381,13 @@ class TranslationCache:
                 if obs.enabled():
                     obs.metrics().counter("translation_cache.hits").inc()
                 return chosen.copy(), report
+        if self.store is not None:
+            warm = self._disk_get(key, kernel)
+            if warm is not None:
+                self.hits += 1
+                if obs.enabled():
+                    obs.metrics().counter("translation_cache.hits").inc()
+                return warm
         self.misses += 1
         if obs.enabled():
             obs.metrics().counter("translation_cache.misses").inc()
@@ -302,6 +401,17 @@ class TranslationCache:
             if obs.enabled():
                 obs.metrics().counter("translation_cache.evictions").inc()
         self._entries[key] = (kernel.render(), chosen.copy(), report)
+        if self.store is not None:
+            from repro.binary import container
+
+            self.store.put(
+                self._store_key(key),
+                container.dumps(chosen),
+                meta={
+                    "input_render": kernel.render(),
+                    "report": self._report_to_json(report),
+                },
+            )
 
 
 @dataclass
@@ -343,11 +453,17 @@ class TranslationService:
         use_predictor: bool = True,
         cache: Optional[TranslationCache] = None,
         verify: str = "final",
+        store=None,
     ):
+        if store is not None and cache is not None:
+            raise ValueError(
+                "pass either a cache (optionally built with store=...) or a "
+                "store, not both"
+            )
         self.target_regs = target_regs
         self.options = options
         self.use_predictor = use_predictor
-        self.cache = cache if cache is not None else TranslationCache()
+        self.cache = cache if cache is not None else TranslationCache(store=store)
         #: pass-pipeline self-check policy ("final" on the serving hot path;
         #: byte-identical output to "each" — regression-tested)
         self.verify = verify
@@ -377,13 +493,16 @@ class TranslationService:
         """The service's health as one plain dict: call latency distribution
         (p50/p99), throughput, and translation-cache telemetry — the shape
         the future translation daemon will serve from its metrics endpoint."""
-        return {
+        snap = {
             "calls": self._translate_ms.count,
             "kernels": self._kernels_done,
             "kernels_per_s": round(self.kernels_per_second, 3),
             "translate_ms": self._translate_ms.snapshot(),
             "cache": self.cache.stats(),
         }
+        if self.cache.store is not None:
+            snap["store"] = self.cache.store.stats()
+        return snap
 
     def translate(self, data: bytes) -> Tuple[bytes, BatchTranslationReport]:
         """Container bytes in, container bytes out, every kernel translated."""
@@ -471,6 +590,16 @@ class TranslationService:
                         cached_flags.append(True)
                     else:
                         outcome = search(kernel, config)
+                        if outcome.quarantined:
+                            # crashed-and-quarantined tasks shrank the
+                            # search space: the result is not the fault-free
+                            # one, so never cache or silently serve it
+                            raise DegradedSearchError(
+                                f"{kernel.name}: search quarantined "
+                                f"{len(outcome.quarantined)} crashed task(s) "
+                                f"({outcome.quarantined[:3]}); result is not "
+                                "the fault-free search outcome"
+                            )
                         report = TranslationReport(
                             kernel_name=kernel.name,
                             baseline_regs=kernel.reg_count,

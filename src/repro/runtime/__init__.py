@@ -1,4 +1,14 @@
-from .trainer import Trainer, TrainConfig
+from .daemon import DaemonConfig, DaemonRequest, DaemonResponse, TranslationDaemon
 from .serving import Server, ServeConfig
+from .trainer import TrainConfig, Trainer
 
-__all__ = ["Trainer", "TrainConfig", "Server", "ServeConfig"]
+__all__ = [
+    "Trainer",
+    "TrainConfig",
+    "Server",
+    "ServeConfig",
+    "TranslationDaemon",
+    "DaemonConfig",
+    "DaemonRequest",
+    "DaemonResponse",
+]
