@@ -17,6 +17,12 @@ like-for-like comparison:
                  wall time — the headline throughput the CI trend gate
                  watches.
 
+The summary also attributes every cell's winner to its strategy family
+(``family_hist``: nvcc / fixed / paper / warp_share / block_share /
+compressed), counts per-strategy search wins (``strategy_wins``), and
+reports ``new_family_wins`` — cells won by a related-work family — which
+the CI trend gate holds non-decreasing.
+
 Writes ``BENCH_search.json`` atomically.
 """
 
@@ -44,6 +50,28 @@ def _geomean(xs: List[float]) -> float:
     return math.exp(sum(math.log(x) for x in xs) / len(xs))
 
 
+#: strategy families introduced by the registry (vs the paper's machinery)
+NEW_FAMILIES = ("warp_share", "block_share", "compressed")
+
+
+def chosen_family(chosen: str) -> tuple:
+    """``(family, strategy_name)`` of one search-chosen label.
+
+    ``<arch>/nvcc`` is the do-nothing baseline; ``<arch>/regdem@T:<strategy>
+    :<opts>`` resolves its strategy's registry family; anything else is an
+    anchored fixed-§5.3 variant (``local``, ``local-shared``, ...).
+    """
+    from repro.core.strategies import get_strategy
+
+    tail = chosen.split("/", 1)[1]
+    if tail == "nvcc":
+        return "nvcc", None
+    if tail.startswith("regdem@"):
+        name = tail.split(":", 1)[1].split(":", 1)[0]
+        return get_strategy(name).family, name
+    return "fixed", None
+
+
 def tune_benchmark(bench: str, arch: str, workers: int = 0) -> Dict:
     """Search one (benchmark, arch) cell, anchored on the fixed §5.3 set.
 
@@ -66,8 +94,10 @@ def tune_benchmark(bench: str, arch: str, workers: int = 0) -> Dict:
     )
     sr = outcome.report
     best_cycles = sr.cycles[sr.chosen]
+    family, _ = chosen_family(sr.chosen)
     return {
         "chosen": sr.chosen,
+        "chosen_family": family,
         "fixed_best": fixed_best,
         "cycles_chosen": best_cycles,
         "cycles_fixed": fixed_cycles,
@@ -91,6 +121,9 @@ def measure(workers: int = 0) -> Dict[str, Dict]:
     wins: List[float] = []
     strict_wins = 0
     search_seconds = 0.0
+    family_hist: Dict[str, int] = {}
+    strategy_wins: Dict[str, int] = {}
+    new_family_wins = 0
 
     t0 = time.perf_counter()
     for bench in PAPER_BENCHMARKS:
@@ -104,6 +137,11 @@ def measure(workers: int = 0) -> Dict[str, Dict]:
             agreements.append(row["agreement"])
             wins.append(row["cycles_fixed"] / row["cycles_chosen"])
             strict_wins += row["cycles_chosen"] < row["cycles_fixed"]
+            family, strat = chosen_family(row["chosen"])
+            family_hist[family] = family_hist.get(family, 0) + 1
+            if strat is not None:
+                strategy_wins[strat] = strategy_wins.get(strat, 0) + 1
+            new_family_wins += family in NEW_FAMILIES
     elapsed = time.perf_counter() - t0
 
     report["summary"] = {
@@ -115,6 +153,9 @@ def measure(workers: int = 0) -> Dict[str, Dict]:
         "mean_agreement": round(sum(agreements) / len(agreements), 4),
         "geomean_win": round(_geomean(wins), 4),
         "strict_wins": strict_wins,
+        "family_hist": dict(sorted(family_hist.items())),
+        "strategy_wins": dict(sorted(strategy_wins.items())),
+        "new_family_wins": new_family_wins,
         "seconds": round(elapsed, 3),
         "workers": workers,
     }
@@ -142,5 +183,6 @@ def search_rows(
         f"variants_per_s={s['variants_per_s']};"
         f"geomean_win={s['geomean_win']};"
         f"strict_wins={s['strict_wins']}/{s['searches']};"
+        f"new_family_wins={s['new_family_wins']};"
         f"mean_agreement={s['mean_agreement']}"
     )

@@ -46,6 +46,9 @@ METRICS: List[Tuple[str, Tuple[str, ...], str]] = [
     ("BENCH_search.json", ("summary", "variants_per_s"), "higher"),
     ("BENCH_search.json", ("summary", "mean_agreement"), "higher"),
     ("BENCH_search.json", ("summary", "geomean_win"), "higher"),
+    # cells won by a related-work strategy family (warp_share/block_share/
+    # compressed): the registry's new families must keep earning their keep
+    ("BENCH_search.json", ("summary", "new_family_wins"), "higher"),
     # overhead percentages are too noisy for a relative gate; the span
     # recording throughput is the stable telemetry headline
     ("BENCH_obs.json", ("events", "events_per_s"), "higher"),

@@ -6,7 +6,9 @@ Faithful-reproduction layer:
 * :mod:`repro.core.occupancy`   CC 5.2 occupancy calculator
 * :mod:`repro.core.sched`       control-word scheduler / verifier
 * :mod:`repro.core.kernelgen`   synthetic "nvcc" + Table-1 benchmark corpus
-* :mod:`repro.core.candidates`  §3.4.3 candidate strategies
+* :mod:`repro.core.candidates`  §3.4.3 candidate orderings
+* :mod:`repro.core.strategies`  pluggable spill-strategy registry (the
+                                 paper's orderings + related-work families)
 * :mod:`repro.core.spillspace`  where spilled words live (shared vs local)
 * :mod:`repro.core.passes`      the unified spill-transform pass pipeline
 * :mod:`repro.core.regdem`      §3 demotion algorithm (Fig. 3), as a
@@ -72,6 +74,13 @@ from .search import (
 from .simcache import DEFAULT_SIM_CACHE, SimCache, simulate_cached
 from .simulator import SimResult, simulate, simulate_reference, speedup
 from .spillspace import LocalSpace, SharedSpace, SpillSpace
+from .strategies import (
+    Strategy,
+    StrategyHints,
+    get_strategy,
+    register_strategy,
+    strategy_names,
+)
 from .translator import (
     BatchTranslationReport,
     TranslationCache,
@@ -103,6 +112,11 @@ __all__ = [
     "LocalSpace",
     "SharedSpace",
     "SpillSpace",
+    "Strategy",
+    "StrategyHints",
+    "get_strategy",
+    "register_strategy",
+    "strategy_names",
     "RegDemOptions",
     "RegDemResult",
     "auto_targets",

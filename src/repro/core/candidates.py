@@ -81,18 +81,25 @@ def spillable(kernel: Kernel) -> List[int]:
     return [r for r in sorted(widths) if r not in excl]
 
 
-def make_candidates(kernel: Kernel, strategy: str) -> List[Tuple[int, int]]:
-    """Ordered demotion queue: list of (leading_reg, width)."""
-    if strategy not in STRATEGIES:
-        raise ValueError(f"unknown strategy {strategy!r}; want one of {STRATEGIES}")
+def order_candidates(kernel: Kernel, ordering: str) -> List[Tuple[int, int]]:
+    """The §3.4.3 cost orderings over the spillable pool, by name.
+
+    This is the ordering primitive the strategy registry builds on:
+    registered strategies compose an ordering with their own filters (e.g.
+    compressed slots keep only width-1 candidates).
+    """
+    if ordering not in STRATEGIES:
+        raise ValueError(
+            f"unknown candidate ordering {ordering!r}; want one of {STRATEGIES}"
+        )
     widths = width_map(kernel)
     excl = _excluded(kernel)
     regs = [r for r in sorted(widths) if r not in excl]
 
-    if strategy == "static":
+    if ordering == "static":
         counts = kernel.static_access_counts()
         key = lambda r: (counts.get(r, 0), r)
-    elif strategy == "cfg":
+    elif ordering == "cfg":
         cfg = CFG(kernel)
         weighted: Dict[int, float] = {}
         for blk in cfg.blocks:
@@ -107,3 +114,16 @@ def make_candidates(kernel: Kernel, strategy: str) -> List[Tuple[int, int]]:
         key = lambda r: (len(conf.get(r, ())), counts.get(r, 0), r)
 
     return [(r, widths[r]) for r in sorted(regs, key=key)]
+
+
+def make_candidates(kernel: Kernel, strategy: str) -> List[Tuple[int, int]]:
+    """Ordered demotion queue: list of (leading_reg, width).
+
+    ``strategy`` resolves through the registry
+    (:func:`repro.core.strategies.get_strategy`), so any registered name —
+    paper ordering or new family — is valid here; the paper's three names
+    keep their historical byte-identical orderings.
+    """
+    from .strategies import get_strategy
+
+    return get_strategy(strategy).select(kernel)

@@ -173,6 +173,17 @@ OPCODES: Dict[str, OpInfo] = dict(
         _op("EXIT", OpClass.CONTROL, 0, 0, is_exit=True),
         _op("NOP", OpClass.CONTROL, 0, 0),
         _op("BAR", OpClass.CONTROL, 0, 0),  # __syncthreads
+        # warp-level register resource sharing (arXiv 1503.05694): loads and
+        # stores against the co-scheduled warps' shared demoted-slot pool.
+        # MISC class: near-register-file port, cheaper than the smem path.
+        # Appended after the original table so every pre-existing opcode id
+        # (container encodings, CRCs) is unchanged.
+        _op("LDP", OpClass.MISC, 1, 1, is_load=True),
+        _op("STP", OpClass.MISC, 0, 2, is_store=True),
+        # compressed spill slots (arXiv 2006.05693): static pack/unpack of a
+        # demoted value around its shared-memory slot (ALU for smem bytes)
+        _op("PCK", OpClass.INT, 1, 1),
+        _op("UPCK", OpClass.INT, 1, 1),
     ]
 )
 
@@ -801,6 +812,11 @@ class Interp:
         self.smem: Dict[int, float] = {}
         self.lmem: Dict[int, float] = {}
         self.gmem: Dict[int, float] = {}
+        #: warp-shared demoted-slot pool (LDP/STP).  Scalar execution models
+        #: one thread, whose pool slots are private by construction — the
+        #: per-warp sharing is an occupancy/latency property, not a dataflow
+        #: one (co-scheduled warps never alias each other's slots).
+        self.pmem: Dict[int, float] = {}
         self.stores: List[Tuple[int, float]] = []
 
     def run(self, inputs: Dict[int, float], gmem: Optional[Dict[int, float]] = None):
@@ -926,6 +942,14 @@ class Interp:
             self._w(ins.dsts[0], self.lmem.get(int(self._r(s[0])) + ins.offset, 0.0))
         elif op == "STL":
             self.lmem[int(self._r(s[0])) + ins.offset] = self._r(s[1])
+        elif op == "LDP":
+            self._w(ins.dsts[0], self.pmem.get(int(self._r(s[0])) + ins.offset, 0.0))
+        elif op == "STP":
+            self.pmem[int(self._r(s[0])) + ins.offset] = self._r(s[1])
+        elif op in ("PCK", "UPCK"):
+            # static compression is value-preserving on the modelled float
+            # domain: pack/unpack is an ALU-cost identity round-trip
+            self._w(ins.dsts[0], self._r(s[0]))
         elif op == "S2R":
             self._w(ins.dsts[0], float(self.tid))
         elif op in ("NOP", "BAR"):

@@ -110,6 +110,9 @@ def spill_targets(
     smem_per_block: int,
     available_smem: int | None = None,
     sm: SMConfig = MAXWELL,
+    bytes_per_slot: int = 4,
+    reg_cost_per_word: float = 0.0,
+    feasible=None,
 ) -> list[int]:
     """Register targets that land exactly on occupancy cliffs.
 
@@ -120,6 +123,21 @@ def spill_targets(
     largest register count achieving a strictly higher occupancy level than
     the previous, floored at 32 registers (below which occupancy no longer
     improves — paper §3).
+
+    The cost model is parameterized for the registered spill-strategy
+    families (:mod:`repro.core.strategies`):
+
+    * ``bytes_per_slot`` — per-thread shared-memory bytes one demoted word
+      occupies (4 = eq.-1 full words; 2 = compressed slots; 0 = a space
+      whose slots are not charged against this block's allocation);
+    * ``reg_cost_per_word`` — extra architectural registers each demoted
+      word costs (warp-level resource sharing charges ``1/share``: the
+      slot pool is register-file backed and shared by co-scheduled warps);
+    * ``feasible`` — optional ``(spilled_words, Occupancy) -> bool`` veto
+      for budgets outside the per-block charge (e.g. the per-SM scratchpad
+      pool a cross-block carve draws from).
+
+    Defaults reproduce the paper's shared-memory ladder exactly.
     """
     base = occupancy(max(regs_per_thread, 1), threads_per_block, smem_per_block, sm)
     targets: list[int] = []
@@ -128,7 +146,7 @@ def spill_targets(
         # demoted registers consume shared memory themselves (eq. 1 layout);
         # the occupancy check must charge for it, or the "gain" is illusory.
         spilled = regs_per_thread - regs
-        smem_needed = spilled * threads_per_block * 4
+        smem_needed = spilled * threads_per_block * bytes_per_slot
         budget = (
             available_smem
             if available_smem is not None
@@ -136,7 +154,12 @@ def spill_targets(
         )
         if smem_needed > budget:
             break
-        occ = occupancy(regs, threads_per_block, smem_per_block + smem_needed, sm)
+        eff_regs = regs + math.ceil(spilled * reg_cost_per_word)
+        if eff_regs >= regs_per_thread:
+            continue
+        occ = occupancy(eff_regs, threads_per_block, smem_per_block + smem_needed, sm)
+        if feasible is not None and not feasible(spilled, occ):
+            continue
         if occ.occupancy > best:
             targets.append(regs)
             best = occ.occupancy

@@ -177,6 +177,7 @@ class PassContext:
         target: int = REG_FLOOR,
         floor: Optional[int] = None,
         max_remat: Optional[int] = None,
+        select: Optional[Callable[[Kernel], List[Tuple[int, int]]]] = None,
     ):
         self.original = kernel
         self.kernel = kernel.copy()
@@ -194,9 +195,14 @@ class PassContext:
         self.floor = max(target, REG_FLOOR) if floor is None else floor
         self.max_remat = max_remat
 
-        #: ordered demotion queue [(leading_reg, width)], pruned as passes run
-        self.candidates: List[Tuple[int, int]] = make_candidates(
-            self.kernel, self.options.candidate_strategy
+        #: ordered demotion queue [(leading_reg, width)], pruned as passes
+        #: run.  ``select`` overrides the default queue builder — registered
+        #: strategies (:mod:`repro.core.strategies`) use it to filter or
+        #: reorder candidates beyond the paper's three orderings.
+        self.candidates: List[Tuple[int, int]] = (
+            select(self.kernel)
+            if select is not None
+            else make_candidates(self.kernel, self.options.candidate_strategy)
         )
         self.conflicts: Dict[int, Set[int]] = operand_conflicts(self.kernel)
 
@@ -530,8 +536,6 @@ def demote_register(
                 )
                 lds.ctrl.read_bar = tracker.get_barrier(lds)
                 lds.ctrl.write_bar = tracker.get_barrier(lds)
-                ins.ctrl.wait.add(lds.ctrl.read_bar)
-                ins.ctrl.wait.add(lds.ctrl.write_bar)
                 if (
                     prev_real is not None
                     and prev_real.tag == "demoted_store"
@@ -540,11 +544,46 @@ def demote_register(
                     # RDV must be free before the demoted register is loaded
                     lds.ctrl.wait.add(prev_real.ctrl.read_bar)
                 append(lds)
+                if space.unpack_op is not None:
+                    # the unpack consumes the loaded value, taking over the
+                    # load's barrier waits; the renamed instruction then only
+                    # needs the fixed-latency ALU gap fixup_stalls inserts
+                    upk = Instr(
+                        space.unpack_op,
+                        [rdv + j],
+                        [rdv + j],
+                        pred=ins.pred,
+                        pred_neg=ins.pred_neg,
+                        tag="demoted_unpack",
+                    )
+                    upk.ctrl.wait.add(lds.ctrl.read_bar)
+                    upk.ctrl.wait.add(lds.ctrl.write_bar)
+                    append(upk)
+                else:
+                    ins.ctrl.wait.add(lds.ctrl.read_bar)
+                    ins.ctrl.wait.add(lds.ctrl.write_bar)
         append(ins)
 
         # ---- write access: STS [RDA+offset], RDV after inst (lines 11-19) --
         if is_dst:
             for j in range(width):
+                if ins.info.needs_write_barrier and ins.ctrl.write_bar is None:
+                    ins.ctrl.write_bar = tracker.get_barrier(ins)
+                if space.pack_op is not None:
+                    # the pack consumes the produced value, taking over the
+                    # producer's write-barrier wait; the store then only
+                    # needs the ALU gap against the pack
+                    pck = Instr(
+                        space.pack_op,
+                        [rdv + j],
+                        [rdv + j],
+                        pred=ins.pred,
+                        pred_neg=ins.pred_neg,
+                        tag="demoted_pack",
+                    )
+                    if ins.ctrl.write_bar is not None:
+                        pck.ctrl.wait.add(ins.ctrl.write_bar)
+                    append(pck)
                 sts = Instr(
                     space.store_op,
                     srcs=[rda, rdv + j],
@@ -553,9 +592,7 @@ def demote_register(
                     pred_neg=ins.pred_neg,
                     tag="demoted_store",
                 )
-                if ins.info.needs_write_barrier and ins.ctrl.write_bar is None:
-                    ins.ctrl.write_bar = tracker.get_barrier(ins)
-                if ins.ctrl.write_bar is not None:
+                if space.pack_op is None and ins.ctrl.write_bar is not None:
                     sts.ctrl.wait.add(ins.ctrl.write_bar)
                 sts.ctrl.read_bar = tracker.get_barrier(sts)
                 append(sts)
@@ -711,8 +748,12 @@ class DemotionPass(Pass):
     def run(self, ctx: PassContext) -> Dict[str, int]:
         k = ctx.kernel
         regs = words = pruned = 0
+        space_full = 0
         while ctx.candidates:
             if packed_reg_count(k) <= ctx.floor:
+                break
+            if not ctx.space.has_room(ctx, ctx.candidates[0][1]):
+                space_full = 1
                 break
             r, width = ctx.candidates.pop(0)
             offsets = ctx.space.offsets(ctx, width)
@@ -726,7 +767,12 @@ class DemotionPass(Pass):
             before = len(ctx.candidates)
             ctx.candidates = [(c, w) for c, w in ctx.candidates if c not in bad]
             pruned += before - len(ctx.candidates)
-        return {"demoted_regs": regs, "demoted_words": words, "conflicts_pruned": pruned}
+        return {
+            "demoted_regs": regs,
+            "demoted_words": words,
+            "conflicts_pruned": pruned,
+            "space_full": space_full,
+        }
 
 
 class RedundancyEliminationPass(Pass):
@@ -794,6 +840,46 @@ class StallFixupPass(Pass):
 
     def run(self, ctx: PassContext) -> None:
         fixup_stalls(ctx.kernel)
+
+
+class PoolAnchorPass(Pass):
+    """Charge the warp-pool register cost (arXiv 1503.05694) honestly.
+
+    Warp-level resource sharing backs demoted slots with the register file:
+    each warp gives up its share of the pool — ``ceil(demoted_words /
+    share)`` architectural registers.  The compiler model can't shrink the
+    register file, so after compaction this pass anchors the kernel's
+    register count at the true post-sharing demand by defining the highest
+    pool register with a dead ``MOV`` at kernel entry.  Runs after
+    :class:`CompactionPass` (so compaction can't pack the charge away) and
+    before :class:`StallFixupPass` (the anchor is an ordinary 1-stall ALU
+    op)."""
+
+    name = "pool_anchor"
+
+    def __init__(self, share: int):
+        if share < 2:
+            raise ValueError(f"warp pool needs share >= 2 warps, got {share}")
+        self.share = share
+
+    def run(self, ctx: PassContext) -> Dict[str, int]:
+        import math
+
+        if not ctx.demoted_words:
+            return {"pool_regs": 0}
+        k = ctx.kernel
+        pool_regs = math.ceil(ctx.demoted_words / self.share)
+        from .isa import Ctrl
+
+        anchor = Instr(
+            "MOV",
+            [k.reg_count + pool_regs - 1],
+            [RZ],
+            ctrl=Ctrl(stall=1),
+            tag="pool_anchor",
+        )
+        k.items[:0] = [anchor]
+        return {"pool_regs": pool_regs, "reg_count": k.reg_count}
 
 
 # ---------------------------------------------------------------------------

@@ -93,6 +93,25 @@ def naive_stalls(kernel: Kernel) -> float:
     return float(sum(ins.ctrl.stall for ins in kernel.instructions()))
 
 
+def strategy_access_cost(hints, arch) -> float:
+    """Predicted cycles one demoted-slot access costs under ``arch``, from
+    a strategy's :class:`~repro.core.strategies.StrategyHints` alone — no
+    variant built yet.
+
+    The slot load/store pays its access path's latency
+    (``hints.latency_class`` names the :class:`~repro.arch.registry.
+    LatencyModel` attribute) plus one fixed ALU latency per pack/unpack op
+    (``hints.access_overhead``).  The autotuning search breaks exact
+    predictor ties toward the strategy with the cheaper access path; the
+    paper orderings all share one hints object, so their relative ordering
+    is unchanged by this tie-break.
+    """
+    return (
+        getattr(arch.latency, hints.latency_class)
+        + hints.access_overhead * arch.latency.alu
+    )
+
+
 # ---------------------------------------------------------------------------
 # The empirical occupancy-performance curve f(x) (eq. 3)
 # ---------------------------------------------------------------------------

@@ -76,16 +76,36 @@ def demote(
     target_regs: int,
     options: Optional[RegDemOptions] = None,
     verify: str = "each",
+    space=None,
+    select=None,
+    pipeline=None,
+    observer=None,
 ) -> RegDemResult:
     """Run RegDem on ``kernel`` toward ``target_regs``; returns a new kernel.
 
     ``verify`` is the pipeline self-check policy (see
     :class:`repro.core.passes.PassPipeline`); the default proves schedule
     validity and dataflow equivalence after every pass.
+
+    The remaining keywords are the strategy-registry extension points
+    (:mod:`repro.core.strategies`): ``space`` overrides the
+    :class:`~repro.core.spillspace.SharedSpace` destination, ``select``
+    overrides the candidate queue builder, ``pipeline`` replaces the
+    standard :func:`~repro.core.passes.demotion_pipeline` schedule (its own
+    verify policy then applies), and ``observer`` is forwarded to
+    :meth:`~repro.core.passes.PassPipeline.run` (per-pass hooks for the
+    prefix-invariant property tests).
     """
     options = options or RegDemOptions()
-    ctx = PassContext(kernel, SharedSpace(), options, target=target_regs)
-    demotion_pipeline(options, verify=verify).run(ctx)
+    ctx = PassContext(
+        kernel,
+        SharedSpace() if space is None else space,
+        options,
+        target=target_regs,
+        select=select,
+    )
+    pipe = pipeline if pipeline is not None else demotion_pipeline(options, verify=verify)
+    pipe.run(ctx, observer=observer)
     res = RegDemResult(
         kernel=ctx.kernel,
         demoted=ctx.demoted,

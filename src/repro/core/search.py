@@ -4,10 +4,10 @@ The paper's pipeline is "generate variants, let the compile-time predictor
 pick one" (§4-§5) over a fixed, hand-picked variant set.  This module
 searches the much larger space the machinery already supports:
 
-* every :mod:`repro.core.candidates` strategy (``static``/``cfg``/``conflict``),
-* the full :func:`repro.core.regdem.auto_targets` occupancy-cliff ladder,
-* the :class:`repro.core.passes.RegDemOptions` knobs (RDV bank-conflict
-  avoidance, the §3.4.2 enhancement passes),
+* every registered :mod:`repro.core.strategies` strategy — the paper's
+  candidate orderings (``static``/``cfg``/``conflict``) plus the
+  related-work families (``warp_share``/``block_share``/``compressed``),
+* each strategy's own occupancy-cliff target ladder and option combos,
 * every registered :mod:`repro.arch` backend the kernel can retarget to.
 
 Exhaustively simulating that space is what the predictor exists to avoid, so
@@ -55,12 +55,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro import obs
 from repro.obs.stallprof import StallProfile
 
-from .candidates import STRATEGIES, spillable
+from .candidates import STRATEGIES, spillable  # noqa: F401  (STRATEGIES re-exported)
 from .isa import Kernel
-from .passes import RegDemOptions
 from .predictor import achieved_occupancy, f_occupancy, ranking_agreement
-from .regdem import auto_targets, demote
 from .simcache import DEFAULT_SIM_CACHE, SimCache
+from .strategies import get_strategy, strategy_names
 from .workerpool import Quarantined, WorkerCrashError, supervised_map
 
 #: Relative simulated-cycle slack the beam search is allowed vs exhaustive
@@ -77,8 +76,9 @@ class SearchConfig:
     result — pinned by the determinism property test.
     """
 
-    #: candidate strategies to probe (§3.4.3)
-    strategies: Tuple[str, ...] = STRATEGIES
+    #: registered strategy names to probe (:mod:`repro.core.strategies`);
+    #: ``None`` = every registered strategy, in registration order
+    strategies: Optional[Tuple[str, ...]] = None
     #: arch registry names to retarget to; ``None`` = every registered arch
     archs: Optional[Tuple[str, ...]] = None
     #: truncate the auto_targets ladder per arch (None = every cliff)
@@ -113,9 +113,13 @@ class SearchConfig:
         ``workers`` and ``seed`` are deliberately absent: neither changes
         the outcome (the tasks are pure and never draw randomness), so
         tuning the same content under a different pool size or seed must be
-        a cache hit, not a re-search."""
+        a cache hit, not a re-search.  An explicit ``strategies`` tuple
+        signs as itself — byte-identical to the pre-registry signatures for
+        the paper's names (pinned by the signature-stability test);
+        ``None`` resolves to the registered names, so registering a new
+        strategy correctly invalidates default-config tunes."""
         return (
-            tuple(self.strategies),
+            tuple(strategy_names()) if self.strategies is None else tuple(self.strategies),
             None if self.archs is None else tuple(self.archs),
             self.max_targets,
             self.full_options,
@@ -313,23 +317,17 @@ def _task_obs_end(tel_state: tuple) -> tuple:
     return tuple(t.export_events(mark)), t.registry.export()
 
 
-def _build_variant(base, target, strategy, flags, verify, cache):
+def _build_variant(base, target, strategy, combo, verify, cache):
     """Build + predictor-score one demotion variant.
 
     Pure function of its inputs — the in-process stage loop and the pool
     task (:func:`_expand_one`) both run exactly this, so pool size can
-    never change a result.  Returns ``(DemotionResult, occupancy, stalls)``
-    with the stall estimate measured through ``cache``.
+    never change a result.  ``strategy`` is a registry name and ``combo``
+    one of its option combos (primitives only: picklable either way).
+    Returns ``(RegDemResult, occupancy, stalls)`` with the stall estimate
+    measured through ``cache``.
     """
-    bank, elim, resched, subst = flags
-    opts = RegDemOptions(
-        candidate_strategy=strategy,
-        bank_avoid=bank,
-        elim_redundant=elim,
-        reschedule=resched,
-        substitute=subst,
-    )
-    res = demote(base, target, opts, verify=verify)
+    res = get_strategy(strategy).build(base, target, combo, verify=verify)
     occ = achieved_occupancy(res.kernel)
     stalls = cache.estimate_stalls(res.kernel, occ)
     return res, occ, stalls
@@ -341,14 +339,14 @@ def _expand_one(payload: tuple) -> tuple:
     Returns ``(index, kernel_blob, regs, demoted_words, occupancy,
     raw_stalls, cache_export, obs_export)``.
     """
-    (index, base_blob, target, strategy, flags, verify, tel) = payload
+    (index, base_blob, target, strategy, combo, verify, tel) = payload
     from repro.binary import container
 
     tel_state = _task_obs_begin(tel)
     with obs.span("search.variant", index=index, target=target):
         base = container.loads(base_blob)
         cache = SimCache()
-        res, occ, stalls = _build_variant(base, target, strategy, flags, verify, cache)
+        res, occ, stalls = _build_variant(base, target, strategy, combo, verify, cache)
     return (
         index,
         container.dumps(res.kernel),
@@ -491,7 +489,10 @@ def _search_impl(
         bases[arch] = base
         blobs[arch] = container.dumps(base)
 
-    combos = _flag_combos(config.full_options)
+    strategy_list = [
+        get_strategy(s)
+        for s in (strategy_names() if config.strategies is None else config.strategies)
+    ]
     scored: Dict[str, ScoredVariant] = {}
     kernels: Dict[str, Kernel] = {}
 
@@ -513,20 +514,25 @@ def _search_impl(
         )
         kernels[label] = base
 
-    # -- stage 1: enumerate + probe (one default-options demotion per
-    #    (arch, target, strategy)) ---------------------------------------------
-    probe_flags = combos[0]
-    specs: List[Tuple[str, int, str, Tuple[bool, bool, bool, bool]]] = []
+    # -- stage 1: enumerate + probe (one probe-combo demotion per
+    #    (arch, strategy, target)) ---------------------------------------------
+    specs: List[Tuple[str, int, str, tuple]] = []
     space_size = len(base_archs)  # the baselines
     for arch in archs:
         base = bases[arch]
         if not spillable(base):
             continue
-        targets = auto_targets(base, max_targets=config.max_targets)
-        space_size += len(targets) * len(config.strategies) * len(combos)
-        for tgt in targets:
-            for strat in config.strategies:
-                specs.append((arch, tgt, strat, probe_flags))
+        for strat in strategy_list:
+            if strat.archs is not None and arch not in strat.archs:
+                continue
+            if not strat.select(base):
+                # strategy-specific candidate filter left nothing to demote
+                continue
+            targets = strat.targets(base, config.max_targets)
+            combos = strat.option_combos(config.full_options)
+            space_size += len(targets) * len(combos)
+            for tgt in targets:
+                specs.append((arch, tgt, strat.name, combos[0]))
 
     #: the pipeline self-check each variant build runs ("chosen" defers
     #: all verification to the single post-selection winner check)
@@ -576,14 +582,8 @@ def _search_impl(
                     cache.merge(export)
                     _adopt_obs(obs_export)
                     rows.append((container.loads(blob), regs, words, occ, stalls))
-        for (arch, tgt, strat, flags), row in zip(stage_specs, rows):
-            opts_label = RegDemOptions(
-                candidate_strategy=strat,
-                bank_avoid=flags[0],
-                elim_redundant=flags[1],
-                reschedule=flags[2],
-                substitute=flags[3],
-            ).label()
+        for (arch, tgt, strat, combo), row in zip(stage_specs, rows):
+            opts_label = get_strategy(strat).options_label(combo)
             label = f"{arch}/regdem@{tgt}:{opts_label}"
             if row is None:
                 quarantine(label)
@@ -626,14 +626,30 @@ def _search_impl(
 
     adjust()
     probes = [v for v in scored.values() if v.stage == "beam"]
-    beam = sorted(probes, key=lambda v: (v.rel, v.label))[: config.beam_width]
+
+    def access_cost(v: ScoredVariant) -> float:
+        # exact predictor ties break toward the strategy whose demoted-slot
+        # access path is cheaper (registry hints; identical across the
+        # paper orderings, so their historical ordering is untouched)
+        from repro.arch import get_arch
+
+        from .predictor import strategy_access_cost
+
+        strat = get_strategy(v.options.split(":", 1)[0])
+        return strategy_access_cost(strat.hints, get_arch(v.arch))
+
+    beam = sorted(probes, key=lambda v: (v.rel, access_cost(v), v.label))[
+        : config.beam_width
+    ]
     beam_labels = [v.label for v in beam]
 
-    # -- stage 2: expand the option knobs for beam survivors ------------------
+    # -- stage 2: expand the option knobs for beam survivors (each survivor
+    #    sweeps its own strategy's remaining combos) ---------------------------
     expand_specs = [
-        (v.arch, v.target, v.options.split(":", 1)[0], flags)
+        (v.arch, v.target, strat_name, combo)
         for v in beam
-        for flags in combos[1:]
+        for strat_name in (v.options.split(":", 1)[0],)
+        for combo in get_strategy(strat_name).option_combos(config.full_options)[1:]
     ]
     run_stage(expand_specs, "expand")
 

@@ -105,7 +105,25 @@ def option_space(
     ``full`` sweeps all 2^4 flag combinations per strategy (the paper's
     exhaustive search); the default uses the grouped Fig.-7 dimensions
     (bank-conflict avoidance, performance-enhancement passes on/off).
+
+    Strategy names resolve through the registry
+    (:func:`repro.core.strategies.get_strategy` — unknown names get the
+    helpful listing error).  The fixed ``translate`` pipeline builds
+    :class:`RegDemOptions`, which only the paper's ordering strategies
+    carry; the related-work families are searched via
+    :meth:`TranslationService.tune` / :func:`repro.core.search.search`.
     """
+    from .strategies import get_strategy
+
+    for strat in strategies:
+        s = get_strategy(strat)
+        if s.family != "paper":
+            raise ValueError(
+                f"strategy {strat!r} (family {s.family!r}) has no "
+                "RegDemOptions grid; the fixed translate pipeline covers "
+                "the paper orderings only — search the related-work "
+                "families via TranslationService.tune / repro.core.search"
+            )
     out: List[RegDemOptions] = []
     if full:
         for strat in strategies:

@@ -120,6 +120,7 @@ def make_variants(
     profile: Profile,
     regdem_options: Optional[RegDemOptions] = None,
     verify: str = "final",
+    extra_strategies: Optional[List[str]] = None,
 ) -> Dict[str, Variant]:
     """Build all five §5.3 variants for one benchmark profile.
 
@@ -128,6 +129,10 @@ def make_variants(
     schedule + dataflow check once per pipeline, after the last pass — which
     produces byte-identical kernels to ``"each"`` (regression-tested) at a
     fraction of the cost.  Pass ``"each"`` to fault-localize a broken pass.
+
+    ``extra_strategies`` appends registry-built variants (one per named
+    :mod:`repro.core.strategies` strategy, probe options, best cliff
+    target) to the paper's five.
     """
     return make_variants_for(
         generate(profile),
@@ -135,6 +140,7 @@ def make_variants(
         nvcc_spills=profile.nvcc_spills,
         regdem_options=regdem_options,
         verify=verify,
+        extra_strategies=extra_strategies,
     )
 
 
@@ -144,6 +150,7 @@ def make_variants_for(
     nvcc_spills: int = 0,
     regdem_options: Optional[RegDemOptions] = None,
     verify: str = "final",
+    extra_strategies: Optional[List[str]] = None,
 ) -> Dict[str, Variant]:
     """The §5.3 variant matrix for a pre-built baseline kernel.
 
@@ -178,4 +185,28 @@ def make_variants_for(
     lsr = aggressive(base, target, spill_space="shared", max_remat=cap, verify=verify)
     lsr.name = "local-shared-relax"
     out["local-shared-relax"] = lsr
+
+    # registry-built extras: one variant per named strategy at its probe
+    # combo and best cliff target (its own ladder; the paper target when
+    # the ladder is empty)
+    for name in extra_strategies or ():
+        from repro.arch import arch_of
+
+        from .strategies import get_strategy
+
+        strat = get_strategy(name)
+        if strat.archs is not None and arch_of(base).name not in strat.archs:
+            continue
+        if not strat.select(base):
+            continue
+        targets = strat.targets(base, 1)
+        tgt = targets[0] if targets else target
+        res = strat.build(base, tgt, strat.option_combos(False)[0], verify=verify)
+        out[name] = Variant(
+            name=name,
+            kernel=res.kernel,
+            spilled=res.demoted_words,
+            regdem=res,
+            passes=res.passes,
+        )
     return out

@@ -21,6 +21,7 @@ from repro.core.passes import (
 from repro.core.regdem import auto_targets
 from repro.core.sched import verify_schedule
 from repro.core.spillspace import LocalSpace, SharedSpace
+from repro.core.strategies import get_strategy, strategy_names
 
 #: nightly CI sets REGDEM_PROPERTY_SCALE to sweep a larger input space
 SCALE = max(1, int(os.environ.get("REGDEM_PROPERTY_SCALE", "1")))
@@ -67,6 +68,43 @@ def test_demotion_pipeline_prefixes(seed, strategy, flags):
     )
     ctx = PassContext(k, SharedSpace(), opt, target=targets[0])
     _check_prefixes(k, demotion_pipeline(opt, verify="none"), ctx, opt.label())
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    name=st.sampled_from(strategy_names()),
+    combo_index=st.integers(min_value=0, max_value=3),
+)
+@_slow
+def test_registered_strategy_prefixes(seed, name, combo_index):
+    """Every registered strategy's pipeline — whatever passes and spill
+    space its ``build`` wires up — preserves schedule validity and dataflow
+    equivalence at every pass boundary."""
+    strat = get_strategy(name)
+    k = generate(random_profile(seed % 30))
+    if not strat.select(k):
+        return
+    targets = strat.targets(k, None)
+    if not targets:
+        return
+    combos = strat.option_combos(False)
+    combo = combos[combo_index % len(combos)]
+
+    boundaries = []
+    strat.build(
+        k,
+        targets[0],
+        combo,
+        verify="none",
+        observer=lambda p, c: boundaries.append(
+            (p.name, verify_schedule(c.kernel), equivalent(k, c.kernel))
+        ),
+    )
+    assert boundaries, "strategy pipeline ran no passes"
+    tag = strat.options_label(combo)
+    for pass_name, sched_errs, equiv in boundaries:
+        assert sched_errs == [], (tag, pass_name, sched_errs[:2])
+        assert equiv, (tag, f"dataflow broken after pass {pass_name!r}")
 
 
 @given(

@@ -107,6 +107,7 @@ def test_search_metrics_are_gated():
         "summary.variants_per_s",
         "summary.mean_agreement",
         "summary.geomean_win",
+        "summary.new_family_wins",
     }
 
 
