@@ -1,0 +1,127 @@
+"""Real-workload corpus benchmarks: the extracted Pallas profiles, tuned.
+
+Runs the same anchored predictor-guided search as :mod:`benchmarks.
+search_bench` — byte-for-byte the same :func:`~benchmarks.search_bench.
+tune_profile` cell — but over :data:`repro.data.corpus.CORPUS_BENCHMARKS`,
+the ~22 profiles extracted from the in-repo flash-attention / Mamba2-SSD
+Pallas kernels across every model config and serving phase.  This is the
+"does the paper's machinery survive contact with kernels nobody
+hand-picked?" benchmark:
+
+* ``win``            fixed-§5.3-pick cycles / search-pick cycles per cell
+                     (anchoring guarantees >= 1.0; the trend gate holds the
+                     geomean non-decreasing);
+* ``speedup_vs_nvcc``  search pick vs the untouched baseline;
+* ``family_hist``    which strategy family wins on *real* register/smem
+                     mixes (decode cells with tiny register counts and big
+                     kv-tile smem behave nothing like Table 1);
+* ``phase_wins``     geomean win split by serving phase (prefill vs
+                     decode), the corpus-specific axis.
+
+Writes ``BENCH_corpus.json`` atomically.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterator, List, Optional
+
+from repro.arch import arch_names
+from repro.data.corpus import CORPUS_BENCHMARKS
+
+from ._util import write_json_atomic
+from .search_bench import NEW_FAMILIES, _geomean, chosen_family, tune_profile
+
+#: Default location of the machine-readable report (cwd-relative).
+JSON_PATH = "BENCH_corpus.json"
+
+
+def measure(workers: int = 0) -> Dict[str, Dict]:
+    """The full corpus-x-every-arch sweep as a report dict."""
+    archs = arch_names()
+    report: Dict[str, Dict] = {"kernels": {}, "summary": {}}
+    explored_total = 0
+    searches = 0
+    agreements: List[float] = []
+    wins: List[float] = []
+    speedups: List[float] = []
+    strict_wins = 0
+    beats_or_ties = 0
+    search_seconds = 0.0
+    family_hist: Dict[str, int] = {}
+    strategy_wins: Dict[str, int] = {}
+    phase_wins: Dict[str, List[float]] = {"prefill": [], "decode": []}
+    new_family_wins = 0
+
+    t0 = time.perf_counter()
+    for name, prof in CORPUS_BENCHMARKS.items():
+        report["kernels"][name] = {}
+        phase = name.split(".")[1]
+        for arch in archs:
+            row = tune_profile(prof, arch, workers=workers)
+            report["kernels"][name][arch] = row
+            explored_total += row["explored"]
+            searches += 1
+            search_seconds += row["seconds"]
+            agreements.append(row["agreement"])
+            win = row["cycles_fixed"] / row["cycles_chosen"]
+            wins.append(win)
+            speedups.append(row["speedup_vs_nvcc"])
+            strict_wins += row["cycles_chosen"] < row["cycles_fixed"]
+            beats_or_ties += row["cycles_chosen"] <= row["cycles_fixed"]
+            phase_wins[phase].append(win)
+            family, strat = chosen_family(row["chosen"])
+            family_hist[family] = family_hist.get(family, 0) + 1
+            if strat is not None:
+                strategy_wins[strat] = strategy_wins.get(strat, 0) + 1
+            new_family_wins += family in NEW_FAMILIES
+    elapsed = time.perf_counter() - t0
+
+    report["summary"] = {
+        "profiles": len(report["kernels"]),
+        "searches": searches,
+        "explored": explored_total,
+        "variants_per_s": round(explored_total / search_seconds, 2)
+        if search_seconds
+        else 0.0,
+        "mean_agreement": round(sum(agreements) / len(agreements), 4),
+        "geomean_win": round(_geomean(wins), 4),
+        "geomean_speedup_vs_nvcc": round(_geomean(speedups), 4),
+        "strict_wins": strict_wins,
+        "beats_or_ties": beats_or_ties,
+        "phase_geomean_win": {
+            ph: round(_geomean(ws), 4) for ph, ws in phase_wins.items() if ws
+        },
+        "family_hist": dict(sorted(family_hist.items())),
+        "strategy_wins": dict(sorted(strategy_wins.items())),
+        "new_family_wins": new_family_wins,
+        "seconds": round(elapsed, 3),
+        "workers": workers,
+    }
+    return report
+
+
+def corpus_rows(
+    json_path: Optional[str] = JSON_PATH, workers: int = 0
+) -> Iterator[str]:
+    """Yield CSV rows; write ``BENCH_corpus.json`` as a side effect."""
+    report = measure(workers=workers)
+    for name, per_arch in report["kernels"].items():
+        for arch, row in per_arch.items():
+            yield (
+                f"corpus_{arch}_{name},{row['seconds'] * 1e6:.0f},"
+                f"chosen={row['chosen']};win={round(row['win'], 3)};"
+                f"speedup={round(row['speedup_vs_nvcc'], 3)};"
+                f"agreement={round(row['agreement'], 3)}"
+            )
+    if json_path:
+        write_json_atomic(json_path, report)
+    s = report["summary"]
+    yield (
+        f"corpus_summary,{s['seconds'] * 1e6:.0f},"
+        f"profiles={s['profiles']};"
+        f"geomean_win={s['geomean_win']};"
+        f"beats_or_ties={s['beats_or_ties']}/{s['searches']};"
+        f"new_family_wins={s['new_family_wins']};"
+        f"mean_agreement={s['mean_agreement']}"
+    )

@@ -18,6 +18,8 @@ Sections:
                 comparison over every registered arch  (writes BENCH_arch.json)
   search        predictor-guided autotuning search vs the fixed variant set
                 over all 9 benchmarks x every arch    (writes BENCH_search.json)
+  corpus        the real-workload Pallas corpus (repro.data.corpus) through
+                the same anchored search, every arch  (writes BENCH_corpus.json)
   obs           telemetry overhead (enabled vs disabled) + span throughput
                 (writes BENCH_obs.json)
   serve         translation-daemon latency, warm-restart hit rate, and the
@@ -45,7 +47,7 @@ def main() -> None:
         metavar="SECTION[,SECTION...]",
         help="run only these sections (comma-separated, repeatable): "
              "table1|fig6|fig7|fig8|fig9|roofline|tpu_selector|binary|"
-             "pipeline|sim|arch|search|obs|serve",
+             "pipeline|sim|arch|search|corpus|obs|serve",
     )
     ap.add_argument("--binary-json", default=None, metavar="PATH",
                     help="where the binary section writes its JSON report "
@@ -65,6 +67,9 @@ def main() -> None:
     ap.add_argument("--search-workers", type=int, default=0, metavar="N",
                     help="process-pool size for the search section "
                          "(default: in-process; results are identical)")
+    ap.add_argument("--corpus-json", default=None, metavar="PATH",
+                    help="where the corpus section writes its JSON report "
+                         "(default: BENCH_corpus.json in the cwd)")
     ap.add_argument("--obs-json", default=None, metavar="PATH",
                     help="where the obs section writes its JSON report "
                          "(default: BENCH_obs.json in the cwd)")
@@ -79,6 +84,7 @@ def main() -> None:
     from benchmarks import (
         arch_bench,
         binary_bench,
+        corpus_bench,
         obs_bench,
         paper_figs,
         pipeline_bench,
@@ -107,6 +113,12 @@ def main() -> None:
             workers=args.search_workers,
         )
 
+    def corpus_rows():
+        return corpus_bench.corpus_rows(
+            args.corpus_json or corpus_bench.JSON_PATH,
+            workers=args.search_workers,
+        )
+
     def obs_rows():
         return obs_bench.obs_rows(args.obs_json or obs_bench.JSON_PATH)
 
@@ -126,6 +138,7 @@ def main() -> None:
         "sim": sim_rows,
         "arch": arch_rows,
         "search": search_rows,
+        "corpus": corpus_rows,
         "obs": obs_rows,
         "serve": serve_rows,
     }

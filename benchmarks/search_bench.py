@@ -72,14 +72,14 @@ def chosen_family(chosen: str) -> tuple:
     return "fixed", None
 
 
-def tune_benchmark(bench: str, arch: str, workers: int = 0) -> Dict:
-    """Search one (benchmark, arch) cell, anchored on the fixed §5.3 set.
+def tune_profile(prof, arch: str, workers: int = 0) -> Dict:
+    """Search one (Profile, arch) cell, anchored on the fixed §5.3 set.
 
-    Returns the per-cell report row (what ``BENCH_search.json`` stores under
-    ``kernels.<bench>.<arch>``, plus the wall ``seconds``).  The golden test
-    recomputes single cells through this same entry point.
+    Profile-generic core of :func:`tune_benchmark`: also the entry point the
+    real-workload corpus bench (:mod:`benchmarks.corpus_bench`) drives, so
+    synthetic and extracted profiles go through byte-for-byte the same
+    tune pipeline.
     """
-    prof = PAPER_BENCHMARKS[bench]
     base = generate(prof)
     k = base if arch == "maxwell" else retarget(base, arch)
     # the fixed §5.3 pipeline: five variants, predictor picks one
@@ -109,6 +109,16 @@ def tune_benchmark(bench: str, arch: str, workers: int = 0) -> Dict:
         "simulated": sr.simulated,
         "seconds": round(sr.seconds, 4),
     }
+
+
+def tune_benchmark(bench: str, arch: str, workers: int = 0) -> Dict:
+    """Search one (benchmark, arch) cell, anchored on the fixed §5.3 set.
+
+    Returns the per-cell report row (what ``BENCH_search.json`` stores under
+    ``kernels.<bench>.<arch>``, plus the wall ``seconds``).  The golden test
+    recomputes single cells through this same entry point.
+    """
+    return tune_profile(PAPER_BENCHMARKS[bench], arch, workers=workers)
 
 
 def measure(workers: int = 0) -> Dict[str, Dict]:

@@ -49,6 +49,12 @@ METRICS: List[Tuple[str, Tuple[str, ...], str]] = [
     # cells won by a related-work strategy family (warp_share/block_share/
     # compressed): the registry's new families must keep earning their keep
     ("BENCH_search.json", ("summary", "new_family_wins"), "higher"),
+    # the real-workload corpus must keep beating-or-tying the fixed pick
+    # (geomean_win >= 1.0 by anchoring) and the predictor must stay honest
+    # on extracted profiles, not just the synthetic nine
+    ("BENCH_corpus.json", ("summary", "geomean_win"), "higher"),
+    ("BENCH_corpus.json", ("summary", "mean_agreement"), "higher"),
+    ("BENCH_corpus.json", ("summary", "geomean_speedup_vs_nvcc"), "higher"),
     # overhead percentages are too noisy for a relative gate; the span
     # recording throughput is the stable telemetry headline
     ("BENCH_obs.json", ("events", "events_per_s"), "higher"),

@@ -1,23 +1,75 @@
-"""Serve a small model with batched requests (continuous batching).
+"""End-to-end demo: tune a model config's real kernel corpus, then serve it.
+
+Stage 1 — **tune**: the model's Pallas kernels (extracted as RegDem profiles
+by :mod:`repro.data.corpus`) are packed into one container and pushed
+through :meth:`repro.core.translator.TranslationService.tune` — the full
+predictor-guided search — backed by a persistent
+:class:`~repro.core.artifacts.ArtifactStore`.  Run the script twice with the
+same ``--store`` directory and the second tune is served **warm**: every
+kernel is a disk cache hit, zero pipeline passes run, and the emitted
+container bytes are identical.
+
+Stage 2 — **serve**: the (reduced) model itself serves a batch of requests
+with continuous batching, exactly as before.
 
     PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --store /tmp/regdem_cache
+    PYTHONPATH=src python examples/serve_batched.py --model zamba2_2_7b
 """
 
+import argparse
+import tempfile
 import time
 
 import jax
 import numpy as np
 
 from repro.configs import reduced_config
+from repro.core.artifacts import ArtifactStore
+from repro.core.search import SearchConfig
+from repro.core.translator import TranslationService
+from repro.data.corpus import corpus_container, model_corpus_names
 from repro.models import Model
 from repro.runtime import ServeConfig, Server
 from repro.runtime.serving import Request
 
+#: small-but-real search: one cliff target per arch, top beam survivors only
+TUNE = SearchConfig(max_targets=1, beam_width=2, top_k=1)
 
-def main() -> None:
-    cfg = reduced_config("gemma3_1b")
-    model = Model(cfg, attn_impl="xla")
-    params, _ = model.init(jax.random.PRNGKey(0))
+
+def tune_corpus(model: str, store_dir: str) -> None:
+    """Tune the model's extracted kernel corpus against the artifact store."""
+    names = model_corpus_names(model)
+    data = corpus_container(model)
+    svc = TranslationService(store=ArtifactStore(store_dir))
+    t0 = time.time()
+    _, report = svc.tune(data, TUNE)
+    dt = time.time() - t0
+    warm = report.cache_hits == len(names)
+    print(
+        f"tuned {len(names)} corpus kernels for {model} in {dt:.1f}s "
+        f"({'WARM: all ' + str(report.cache_hits) + ' from store, zero passes' if warm else f'{report.cache_misses} searched, {report.cache_hits} cached'})"
+    )
+    for r in report.reports:
+        sr = r.search
+        line = f"  {r.kernel_name}: {r.baseline_regs} regs -> chose {r.chosen}"
+        if sr is not None:
+            line += f" ({sr.speedup:.3f}x vs nvcc, {sr.explored} variants explored)"
+        print(line)
+
+    # second tune of identical content: served entirely from the warm
+    # TranslationCache/ArtifactStore — the serving-path invariant
+    again, rep2 = svc.tune(data, TUNE)
+    assert rep2.cache_hits == len(names) and rep2.cache_misses == 0
+    first, _ = TranslationService(store=ArtifactStore(store_dir)).tune(data, TUNE)
+    assert first == again, "warm restart must be byte-identical"
+    print(f"  re-tune: {rep2.cache_hits}/{len(names)} warm hits, byte-identical")
+
+
+def serve(model: str) -> None:
+    cfg = reduced_config(model)
+    m = Model(cfg, attn_impl="xla")
+    params, _ = m.init(jax.random.PRNGKey(0))
     server = Server(
         cfg,
         ServeConfig(batch_slots=4, max_len=64, max_new_tokens=12, eos=-1, temperature=0.0),
@@ -36,6 +88,20 @@ def main() -> None:
           f"({total_tokens/dt:.1f} tok/s, 4 slots)")
     for c in done[:4]:
         print(f"  req {c.uid}: {len(c.tokens)} tokens, {c.latency_s*1e3:.0f} ms -> {c.tokens[:6]}...")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--model", default="gemma3_1b",
+                    help="model config id (default gemma3_1b)")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="ArtifactStore directory; reuse it across runs for a "
+                         "warm start (default: a fresh temp dir)")
+    args = ap.parse_args()
+    store_dir = args.store or tempfile.mkdtemp(prefix="regdem_store_")
+    print(f"artifact store: {store_dir}")
+    tune_corpus(args.model, store_dir)
+    serve(args.model)
 
 
 if __name__ == "__main__":

@@ -186,6 +186,22 @@ def make_variants_for(
     lsr.name = "local-shared-relax"
     out["local-shared-relax"] = lsr
 
+    # The Hayes & Zhang conversions are built unguarded (check_limit=False:
+    # the historical transformation spills however much the register target
+    # demands), so on kernels with large *static* shared memory the converted
+    # spill arena can push total_shared past the per-block limit — such a
+    # variant would fail to launch on real hardware, and downstream occupancy
+    # math rightly refuses it.  Drop unlaunchable conversions from the
+    # comparison set, exactly as a real experiment would have to.  RegDem
+    # itself never needs this: its §3 target chooser only picks cliffs whose
+    # spills fit (flushed by the real-workload corpus: 24 KiB kv-tile smem
+    # x 256 threads overflows at the 32-register floor).
+    from .spillspace import spill_limit
+
+    for name in ("local-shared", "local-shared-relax"):
+        if out[name].kernel.total_shared > spill_limit(out[name].kernel):
+            del out[name]
+
     # registry-built extras: one variant per named strategy at its probe
     # combo and best cliff target (its own ladder; the paper target when
     # the ladder is empty)

@@ -43,6 +43,10 @@ LANE = 128
 SUBLANE = 8
 
 
+def _align_up(x: int, unit: int) -> int:
+    return -(-x // unit) * unit
+
+
 def choose_block_sizes(
     seq_q: int, seq_kv: int, head_dim: int, dtype_bytes: int = 2,
     vmem_budget: int = VMEM_BUDGET,
@@ -53,24 +57,30 @@ def choose_block_sizes(
       q (bq, dh) + k (bkv, dh) + v (bkv, dh) + scores (bq, bkv)
       + acc (bq, dh) + m/l (bq) + out (bq, dh)
     Doubled for pipelining (double-buffered HBM->VMEM copies).
+
+    Both returned block sizes are always SUBLANE-aligned and never exceed
+    the SUBLANE-rounded sequence length; sequences that are not a multiple
+    of the chosen block are padded by :func:`flash_attention_bh` (masked
+    via the position arrays), so any (bq, bkv) this returns is launchable.
     """
     def fits(bq: int, bkv: int) -> bool:
         operand = (bq * head_dim + 2 * bkv * head_dim) * dtype_bytes
         scratch = (bq * bkv + 2 * bq * head_dim + 2 * bq) * 4
         return 2 * operand + scratch <= vmem_budget
 
-    candidates = [2048, 1024, 512, 256, 128]
-    for bq in candidates:
-        if bq > max(seq_q, LANE):
-            continue
-        for bkv in candidates:
-            if bkv > max(seq_kv, LANE):
-                continue
+    # a short sequence gets one SUBLANE-aligned block covering it entirely;
+    # longer ones pick from the MXU-friendly ladder (padding covers the
+    # partial final block)
+    sq = _align_up(max(seq_q, 1), SUBLANE)
+    skv = _align_up(max(seq_kv, 1), SUBLANE)
+    ladder = [2048, 1024, 512, 256, 128]
+    cand_q = [c for c in ladder if c <= sq] or [sq]
+    cand_kv = [c for c in ladder if c <= skv] or [skv]
+    for bq in cand_q:
+        for bkv in cand_kv:
             if fits(bq, bkv):
-                return min(bq, seq_q) if seq_q >= LANE else seq_q, (
-                    min(bkv, seq_kv) if seq_kv >= LANE else seq_kv
-                )
-    return min(128, seq_q), min(128, seq_kv)
+                return bq, bkv
+    return cand_q[-1], cand_kv[-1]
 
 
 def _attention_kernel(
@@ -151,16 +161,32 @@ def flash_attention_bh(
     block_kv: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Core pallas_call on (batch*heads)-flattened operands."""
+    """Core pallas_call on (batch*heads)-flattened operands.
+
+    Sequence lengths need not be multiples of the block sizes (nor of
+    SUBLANE): operands are zero-padded up to the next block boundary and
+    the padded positions are masked out through the position arrays —
+    padded kv rows get position -1 (always masked: ``kp >= 0`` fails) and
+    padded q rows produce finite garbage that is sliced off before return.
+    """
     bh, sq, dh = q.shape
     skv = k.shape[1]
     scale = 1.0 / math.sqrt(dh)
-    bq = block_q or choose_block_sizes(sq, skv, dh)[0]
-    bkv = block_kv or choose_block_sizes(sq, skv, dh)[1]
-    bq = min(bq, sq)
-    bkv = min(bkv, skv)
-    assert sq % bq == 0 and skv % bkv == 0, (sq, bq, skv, bkv)
-    q_blocks, kv_blocks = sq // bq, skv // bkv
+    auto = choose_block_sizes(sq, skv, dh)
+    bq = _align_up(min(block_q or auto[0], _align_up(sq, SUBLANE)), SUBLANE)
+    bkv = _align_up(min(block_kv or auto[1], _align_up(skv, SUBLANE)), SUBLANE)
+    pad_q = _align_up(sq, bq) - sq
+    pad_kv = _align_up(skv, bkv) - skv
+    if pad_q or pad_kv:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0)))
+        # padded kv columns carry position -1: masked out everywhere.
+        # padded q rows also carry -1 — their outputs are dropped below.
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad_q)), constant_values=-1)
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad_kv)), constant_values=-1)
+    sq_p, skv_p = sq + pad_q, skv + pad_kv
+    q_blocks, kv_blocks = sq_p // bq, skv_p // bkv
 
     kernel = functools.partial(
         _attention_kernel,
@@ -170,7 +196,7 @@ def flash_attention_bh(
         chunk=chunk,
     )
     grid = (bh, q_blocks, kv_blocks)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -181,14 +207,15 @@ def flash_attention_bh(
             pl.BlockSpec((1, bkv), lambda b, i, j: (b, j)),
         ],
         out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((bh, sq_p, dh), q.dtype),
         scratch_shapes=[
-            pl.MemorySpace.ANY if False else _vmem((bq,), jnp.float32),
+            _vmem((bq,), jnp.float32),
             _vmem((bq,), jnp.float32),
             _vmem((bq, dh), jnp.float32),
         ],
         interpret=interpret,
     )(q, k, v, q_positions, kv_positions)
+    return out[:, :sq] if pad_q else out
 
 
 def _vmem(shape, dtype):

@@ -38,6 +38,14 @@ BENCH_SEARCH_PATH = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_search.json"
 )
 
+#: nightly CI raises REGDEM_PROPERTY_SCALE: the live recompute then sweeps
+#: every benchmark x arch cell; tier-1 recomputes a fixed slice spanning the
+#: win regimes (strict search win on each arch, fp64, conversion-dominated)
+#: — full-grid agreement with the goldens is still pinned every run through
+#: the committed BENCH_search.json cross-check.
+SCALE = max(1, int(os.environ.get("REGDEM_PROPERTY_SCALE", "1")))
+TIER1_RECOMPUTE = ["cfd", "pc", "md", "nn"]
+
 
 @pytest.fixture(scope="module")
 def golden_choices():
@@ -53,9 +61,21 @@ def bench_search():
 
 @pytest.fixture(scope="module")
 def measured():
-    """One full 9-benchmarks x both-arches sweep, shared by the golden and
-    acceptance tests (the process-wide SimCache keeps it warm for both)."""
-    return search_bench.measure(workers=0)
+    """The live search recompute shared by the golden and acceptance tests:
+    the full 9-benchmarks x both-arches sweep at nightly scale, the
+    TIER1_RECOMPUTE slice otherwise (the process-wide SimCache keeps it
+    warm for every consumer)."""
+    if SCALE > 1:
+        return search_bench.measure(workers=0)
+    return {
+        "kernels": {
+            bench: {
+                arch: search_bench.tune_benchmark(bench, arch)
+                for arch in ("maxwell", "volta")
+            }
+            for bench in TIER1_RECOMPUTE
+        }
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -120,10 +140,11 @@ def test_bench_search_json_matches_golden(golden_choices, bench_search):
 
 
 def test_golden_search_choices_recompute(golden_choices, measured):
-    """Live recompute of every (benchmark, arch) search matches the pins."""
-    for bench, per_arch in golden_choices.items():
-        for arch, chosen in per_arch.items():
-            assert measured["kernels"][bench][arch]["chosen"] == chosen, (
+    """Live recompute of the measured (benchmark, arch) cells matches the
+    pins — every cell at nightly scale, the tier-1 slice otherwise."""
+    for bench, per_arch in measured["kernels"].items():
+        for arch, row in per_arch.items():
+            assert row["chosen"] == golden_choices[bench][arch], (
                 f"{bench}/{arch}"
             )
 
@@ -138,15 +159,25 @@ def test_search_beats_or_matches_fixed_pipeline_everywhere(measured):
             assert row["cycles_chosen"] <= row["cycles_fixed"], f"{bench}/{arch}"
             strict += row["cycles_chosen"] < row["cycles_fixed"]
     assert strict >= 1
-    assert measured["summary"]["strict_wins"] == strict
+    if "summary" in measured:
+        assert measured["summary"]["strict_wins"] == strict
 
 
 def test_measured_summary_matches_committed(measured, bench_search):
-    """Deterministic summary fields of a fresh sweep equal the committed
-    report (throughput/wall-time fields excluded)."""
-    for key in ("searches", "explored", "geomean_win", "strict_wins",
-                "mean_agreement"):
-        assert measured["summary"][key] == bench_search["summary"][key], key
+    """Deterministic fields of a fresh recompute equal the committed report:
+    per-cell values for every measured cell, plus the summary at nightly
+    scale (throughput/wall-time fields excluded)."""
+    for bench, per_arch in measured["kernels"].items():
+        for arch, row in per_arch.items():
+            committed = bench_search["kernels"][bench][arch]
+            for key in ("chosen", "fixed_best", "cycles_chosen",
+                        "cycles_fixed", "win", "speedup_vs_nvcc",
+                        "agreement", "space_size", "explored"):
+                assert row[key] == committed[key], f"{bench}/{arch}/{key}"
+    if "summary" in measured:
+        for key in ("searches", "explored", "geomean_win", "strict_wins",
+                    "mean_agreement"):
+            assert measured["summary"][key] == bench_search["summary"][key], key
 
 
 # ---------------------------------------------------------------------------

@@ -97,6 +97,44 @@ def test_choose_block_sizes_alignment_and_budget():
     assert bq <= 64 and bkv <= 64
 
 
+def test_choose_block_sizes_always_sublane_aligned():
+    """Regression: the old `bq > max(seq_q, LANE)` guard admitted bq=128 for
+    seq_q < 128 and then returned the raw (possibly unaligned) seq_q.  Every
+    returned block must now be SUBLANE-aligned regardless of sequence
+    length, and launchable via padding (no divisibility requirement)."""
+    from repro.kernels.flash_attention import SUBLANE
+
+    for sq in (1, 7, 17, 100, 120, 127, 129, 200, 333, 4096):
+        for skv in (1, 40, 200, 1500, 32768):
+            bq, bkv = choose_block_sizes(sq, skv, 128)
+            assert bq % SUBLANE == 0 and bkv % SUBLANE == 0, (sq, skv, bq, bkv)
+            assert bq <= max(sq + SUBLANE - 1, SUBLANE), (sq, bq)
+
+
+ODD_SHAPES = [
+    # (B, Sq, Skv, Hq, Hkv, Dh, window, chunk) — none block-aligned
+    (1, 200, 200, 2, 2, 64, None, None),     # partial final blocks both axes
+    (2, 17, 40, 4, 2, 64, None, None),       # tiny unaligned lengths
+    (1, 1, 333, 4, 4, 64, None, None),       # decode-style single q row
+    (2, 100, 100, 4, 2, 64, 32, None),       # sliding window over padding
+    (1, 200, 200, 2, 2, 64, None, 64),       # chunked mask over padding
+    (1, 129, 257, 2, 1, 128, None, None),    # just past a block boundary
+]
+
+
+@pytest.mark.parametrize("shape", ODD_SHAPES)
+def test_flash_attention_unaligned_lengths(shape):
+    """Regression sweep for the partial-final-block path: odd/short lengths
+    must produce exactly the reference result (padded rows/columns masked
+    through the position arrays, never through luck)."""
+    B, Sq, Skv, Hq, Hkv, Dh, window, chunk = shape
+    q, k, v, qpos, kpos = _mk_attention(B, Sq, Skv, Hq, Hkv, Dh, jnp.float32)
+    out = ops.flash_attention(q, k, v, qpos, kpos, window=window, chunk_attn=chunk)
+    want = _ref_model_layout(q, k, v, qpos, kpos, window=window, chunk=chunk)
+    assert out.shape == want.shape
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
 # ---------------------------------------------------------------------------
 # Mamba2 SSD kernel
 # ---------------------------------------------------------------------------
